@@ -1,0 +1,72 @@
+"""Paper Figs. 6-7: satisfied fraction vs objective difficulty.
+
+Difficulty of (LO, PO) = normalized Euclidean distance to the nearest
+Pareto frontier of the dataset (§7.4); the bench reports the satisfied
+percentage among the topmost n% most difficult tasks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (get_model, run_all_methods, shared_dataset,
+                               shared_tasks, write_json)
+
+
+def pareto_frontier(lat: np.ndarray, pw: np.ndarray) -> np.ndarray:
+    """Indices of non-dominated points (min latency, min power)."""
+    order = np.argsort(lat, kind="stable")
+    best_p = np.inf
+    keep = []
+    for i in order:
+        if pw[i] < best_p - 1e-15:
+            keep.append(i)
+            best_p = pw[i]
+    return np.asarray(keep)
+
+
+def task_difficulties(model, tasks) -> np.ndarray:
+    ds = shared_dataset(model)
+    pf = pareto_frontier(ds.latency, ds.power)
+    pl, pp = ds.latency[pf], ds.power[pf]
+    # normalize axes by dataset std (objectives live on very different scales)
+    sl, sp = ds.latency.std() + 1e-12, ds.power.std() + 1e-12
+    d = np.empty(len(tasks.lat_obj))
+    for i, (lo, po) in enumerate(zip(tasks.lat_obj, tasks.pow_obj)):
+        dist = np.sqrt(((pl - lo) / sl) ** 2 + ((pp - po) / sp) ** 2)
+        j = int(np.argmin(dist))
+        mod = np.sqrt((pl[j] / sl) ** 2 + (pp[j] / sp) ** 2) + 1e-12
+        d[i] = dist[j] / mod
+    return d
+
+
+def run(models=("dnnweaver", "im2col"),
+        percents=(10, 25, 50, 75, 100)) -> dict:
+    out = {}
+    for model_name in models:
+        model = get_model(model_name)
+        tasks = shared_tasks(model)
+        diff = task_difficulties(model, tasks)
+        hard_order = np.argsort(-diff)        # most difficult first
+        rows = []
+        for mr in run_all_methods(model_name):
+            sat = np.array([r.satisfied for r in mr.results])
+            curve = {}
+            for pct in percents:
+                k = max(int(len(sat) * pct / 100), 1)
+                curve[pct] = float(sat[hard_order[:k]].mean())
+            tag = mr.method + (f"(w={mr.w_critic})" if mr.w_critic is not None else "")
+            rows.append({"method": tag, "curve": curve})
+            print(f"[difficulty:{model_name}] {tag:14s} "
+                  + " ".join(f"top{p}%={curve[p]:.2f}" for p in percents),
+                  flush=True)
+        out[model_name] = rows
+    write_json("difficulty.json", out)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

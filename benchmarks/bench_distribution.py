@@ -1,0 +1,44 @@
+"""Paper Figs. 8-9: result distribution — log2(LO/L_opt), log2(PO/P_opt)
+per DSE result, plus quadrant occupancy (1st quadrant = both satisfied)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_all_methods, write_json
+
+
+def run(models=("dnnweaver", "im2col")) -> dict:
+    out = {}
+    for model_name in models:
+        rows = []
+        for mr in run_all_methods(model_name):
+            xs, ys = [], []
+            for r in mr.results:
+                if not np.isfinite(r.selection.latency):
+                    continue
+                xs.append(float(np.log2(r.lat_obj / r.selection.latency)))
+                ys.append(float(np.log2(r.pow_obj / r.selection.power)))
+            xs, ys = np.asarray(xs), np.asarray(ys)
+            quad = {
+                "q1_both_sat": float(np.mean((xs >= 0) & (ys >= 0))),
+                "q2_lat_fail": float(np.mean((xs < 0) & (ys >= 0))),
+                "q4_pow_fail": float(np.mean((xs >= 0) & (ys < 0))),
+                "q3_both_fail": float(np.mean((xs < 0) & (ys < 0))),
+            }
+            tag = mr.method + (f"(w={mr.w_critic})" if mr.w_critic is not None else "")
+            rows.append({"method": tag, "quadrants": quad,
+                         "points": [xs.tolist(), ys.tolist()]})
+            print(f"[distribution:{model_name}] {tag:14s} "
+                  + " ".join(f"{k}={v:.2f}" for k, v in quad.items()),
+                  flush=True)
+        out[model_name] = rows
+    write_json("distribution.json", out)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

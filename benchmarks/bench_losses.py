@@ -1,0 +1,45 @@
+"""Paper Figs. 10-11: training losses of the GAN per w_critic.
+
+Checks the paper's qualitative claims: with w_critic = 0 the critic loss
+drifts up (D is ignored); with a proper w_critic all losses regress.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import train_gan_method, get_model, write_json
+
+
+def run(models=("dnnweaver", "im2col"), w_critics=(0.0, 0.5, 1.0)) -> dict:
+    out = {}
+    for model_name in models:
+        model = get_model(model_name)
+        rows = []
+        for w in w_critics:
+            g, _ = train_gan_method(model, w)
+            hist = g.state.history
+            series = {
+                k: [float(h[k]) for h in hist]
+                for k in ("loss_g", "loss_d", "loss_config", "loss_critic",
+                          "sat_rate")
+            }
+            n = len(series["loss_critic"])
+            first = np.mean(series["loss_critic"][: max(n // 4, 1)])
+            last = np.mean(series["loss_critic"][-max(n // 4, 1):])
+            rows.append({"w_critic": w, "series": series,
+                         "critic_first_quarter": float(first),
+                         "critic_last_quarter": float(last)})
+            print(f"[losses:{model_name}] w={w} critic {first:.3f}->{last:.3f} "
+                  f"loss_d {series['loss_d'][0]:.3f}->{series['loss_d'][-1]:.3f}",
+                  flush=True)
+        out[model_name] = rows
+    write_json("losses.json", out)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

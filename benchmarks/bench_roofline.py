@@ -1,0 +1,57 @@
+"""§Roofline: render the 40-cell roofline table from the dry-run output
+(results/dryrun.jsonl, produced by launch/dryrun.py)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, write_json
+
+
+def load(path=None):
+    if path is None:
+        opt = os.path.join(RESULTS_DIR, "dryrun_optimized.jsonl")
+        path = opt if os.path.exists(opt) else os.path.join(
+            RESULTS_DIR, "dryrun.jsonl")
+    if not os.path.exists(path):
+        return []
+    from repro import configs
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            try:
+                r["arch"] = configs.get_arch(r["arch"]).name  # canonical id
+            except Exception:
+                pass
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return list(recs.values())
+
+
+def run(mesh="single_pod_16x16") -> list:
+    recs = [r for r in load() if r["mesh"] == mesh]
+    rows = []
+    print(f"{'arch':22s} {'shape':12s} {'status':8s} {'tC(s)':>8s} {'tM(s)':>8s} "
+          f"{'tX(s)':>8s} {'bound':>10s} {'MFU<=':>6s} {'GB/dev':>7s}")
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r["status"] != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['status']:8s} "
+                  f"{r.get('reason', r.get('error', ''))[:60]}")
+            rows.append(r)
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['status']:8s} "
+              f"{r['t_compute_s']:8.4f} {r['t_memory_s']:8.4f} "
+              f"{r['t_collective_s']:8.4f} {r['bottleneck']:>10s} "
+              f"{(r.get('mfu_bound') or 0):6.3f} "
+              f"{r['bytes_per_device']/1e9:7.2f}")
+        rows.append(r)
+    write_json("roofline_table.json", rows)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Table 5 + Fig. 5: methods x design models — satisfied counts,
+improvement ratio, DSE time, candidate counts, error stds."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import run_all_methods, write_json
+
+
+def run(models=("dnnweaver", "im2col")) -> dict:
+    table = {}
+    for model_name in models:
+        rows = []
+        for mr in run_all_methods(model_name):
+            s = mr.summary()
+            rows.append(s)
+            tag = (f"{s['method']}" + (f"(w={s['w_critic']})"
+                                       if s["w_critic"] is not None else ""))
+            print(f"[table5:{model_name}] {tag:14s} "
+                  f"sat={s['n_satisfied']}/{s['n_tasks']} "
+                  f"impr={s['improvement_ratio']:.4f} "
+                  f"dse={s['dse_time_s']*1e3:.1f}ms "
+                  f"cand={s['n_candidates']:.1f} "
+                  f"std(L)={s['lat_err_std']:.3f} std(P)={s['pow_err_std']:.3f}",
+                  flush=True)
+        table[model_name] = rows
+    write_json("table5.json", table)
+    return table
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Scaled-up validation of the paper's core claim (ii): on the
+high-dimension im2col model, training WITH the discriminator
+(w_critic > 0) finds more satisfying designs than w_critic = 0, and the
+gap widens on hard (near-Pareto) objectives.
+
+Bigger G/D (4 x 512 vs the quick benches' 3 x 256), longer training, and
+hard tasks (slack 1.0-1.6).  Not part of the default `benchmarks.run`
+set — invoked explicitly (results recorded in EXPERIMENTS.md §Repro):
+
+  PYTHONPATH=src python -m benchmarks.bench_wcritic_scaled
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import write_json
+from repro.baselines.sa import SimulatedAnnealing
+from repro.core.dse_api import GANDSE, summarize
+from repro.core.gan import GANConfig
+from repro.dataset.generator import generate_dataset, generate_tasks
+from repro.design_models.im2col import Im2colModel
+
+LAYERS = 4
+NEURONS = 512
+ITERS = 24
+N_DATA = 16000
+N_TASKS = 300
+SLACK = (1.0, 1.6)
+
+
+def run() -> dict:
+    model = Im2colModel()
+    ds = generate_dataset(model, N_DATA, seed=0)
+    tasks = generate_tasks(model, N_TASKS, seed=1, slack=SLACK)
+    out = {"scale": dict(layers=LAYERS, neurons=NEURONS, iters=ITERS,
+                         n_data=N_DATA, n_tasks=N_TASKS, slack=SLACK)}
+    rows = []
+
+    sa = SimulatedAnnealing(model)
+    s = summarize(sa.explore_tasks(tasks))
+    s.update(method="SA", w_critic=None, train_time_s=0.0)
+    rows.append(s)
+    print(f"[wcritic] SA       sat={s['n_satisfied']}/{s['n_tasks']} "
+          f"impr={s['improvement_ratio']:.4f}", flush=True)
+
+    for w in (0.0, 0.5, 1.0):
+        cfg = GANConfig(n_net=model.net_space.n_dims, w_critic=w).scaled(
+            layers=LAYERS, neurons=NEURONS, lr=1e-4, batch_size=512)
+        g = GANDSE(model, cfg)
+        t0 = time.time()
+        g.train(n_data=N_DATA, iters=ITERS, seed=0, ds=ds, log_every=8)
+        t_train = time.time() - t0
+        s = summarize(g.explore_tasks(tasks))
+        s.update(method="GAN", w_critic=w, train_time_s=round(t_train, 1))
+        # D accuracy at end of training (is the critic informative?)
+        s["final_d_acc"] = float(np.mean(
+            [h["d_acc"] for h in g.state.history[-20:]]))
+        s["final_critic_loss"] = float(np.mean(
+            [h["loss_critic"] for h in g.state.history[-20:]]))
+        rows.append(s)
+        print(f"[wcritic] GAN w={w} sat={s['n_satisfied']}/{s['n_tasks']} "
+              f"impr={s['improvement_ratio']:.4f} d_acc={s['final_d_acc']:.3f} "
+              f"critic={s['final_critic_loss']:.3f} train={t_train:.0f}s",
+              flush=True)
+
+    out["rows"] = rows
+    write_json("wcritic_scaled.json", out)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

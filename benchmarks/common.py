@@ -1,0 +1,138 @@
+"""Shared benchmark harness: trains each DSE method once per design model
+(reduced scale for CPU; paper scale documented in EXPERIMENTS.md) and
+caches the trained explorers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.baselines.drl import PolicyGradientDRL
+from repro.baselines.mlp import LargeMLP
+from repro.baselines.sa import SimulatedAnnealing
+from repro.core.dse_api import DSEResult, GANDSE, summarize
+from repro.core.gan import GANConfig
+from repro.dataset.generator import Dataset, DSETask, generate_dataset, generate_tasks
+from repro.design_models.dnnweaver import DnnWeaverModel
+from repro.design_models.im2col import Im2colModel
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+# Reduced-scale training budget (CPU CI).  Paper scale: 11-14 layers x 2048
+# neurons, ~1e5 s on an RTX 3090; see EXPERIMENTS.md §Scale.
+SCALE = {
+    "layers": int(os.environ.get("REPRO_GAN_LAYERS", 3)),
+    "neurons": int(os.environ.get("REPRO_GAN_NEURONS", 256)),
+    "iters": int(os.environ.get("REPRO_GAN_ITERS", 8)),
+    "n_data": int(os.environ.get("REPRO_GAN_DATA", 8000)),
+    "n_tasks": int(os.environ.get("REPRO_GAN_TASKS", 200)),
+    "lr": float(os.environ.get("REPRO_GAN_LR", 1e-4)),
+}
+
+
+def get_model(name: str):
+    return Im2colModel() if name == "im2col" else DnnWeaverModel()
+
+
+@dataclasses.dataclass
+class MethodResult:
+    method: str
+    w_critic: Optional[float]
+    train_time_s: float
+    results: List[DSEResult]
+
+    def summary(self) -> Dict:
+        s = summarize(self.results)
+        s.update(method=self.method, w_critic=self.w_critic,
+                 train_time_s=round(self.train_time_s, 1))
+        return s
+
+
+_CACHE: Dict = {}
+
+
+def shared_dataset(model) -> Dataset:
+    key = ("ds", model.name)
+    if key not in _CACHE:
+        _CACHE[key] = generate_dataset(model, SCALE["n_data"], seed=0)
+    return _CACHE[key]
+
+
+def shared_tasks(model, slack=(1.0, 2.5)) -> DSETask:
+    key = ("tasks", model.name, slack)
+    if key not in _CACHE:
+        _CACHE[key] = generate_tasks(model, SCALE["n_tasks"], seed=1,
+                                     slack=slack)
+    return _CACHE[key]
+
+
+def train_gan_method(model, w_critic: float, seed: int = 0) -> GANDSE:
+    key = ("gan", model.name, w_critic, seed)
+    if key not in _CACHE:
+        cfg = GANConfig(n_net=model.net_space.n_dims, w_critic=w_critic).scaled(
+            layers=SCALE["layers"], neurons=SCALE["neurons"],
+            lr=SCALE["lr"], batch_size=512)
+        g = GANDSE(model, cfg)
+        t0 = time.time()
+        g.train(n_data=SCALE["n_data"], iters=SCALE["iters"], seed=seed,
+                ds=shared_dataset(model))
+        _CACHE[key] = (g, time.time() - t0)
+    return _CACHE[key]
+
+
+def train_mlp_method(model, seed: int = 0):
+    key = ("mlp", model.name, seed)
+    if key not in _CACHE:
+        # parameter-matched to GAN G+D: ~2x layers at same width
+        mlp = LargeMLP(model, hidden_layers=2 * SCALE["layers"],
+                       neurons=SCALE["neurons"], lr=SCALE["lr"])
+        t0 = time.time()
+        mlp.train(n_data=SCALE["n_data"], iters=SCALE["iters"], seed=seed,
+                  ds=shared_dataset(model))
+        _CACHE[key] = (mlp, time.time() - t0)
+    return _CACHE[key]
+
+
+def train_drl_method(model, seed: int = 0):
+    key = ("drl", model.name, seed)
+    if key not in _CACHE:
+        drl = PolicyGradientDRL(model)
+        t0 = time.time()
+        drl.train(n_data=SCALE["n_data"], iters=SCALE["iters"] * 4,
+                  seed=seed, ds=shared_dataset(model))
+        _CACHE[key] = (drl, time.time() - t0)
+    return _CACHE[key]
+
+
+def run_all_methods(model_name: str, w_critics=(0.0, 0.5, 1.0, 1.2)
+                    ) -> List[MethodResult]:
+    model = get_model(model_name)
+    tasks = shared_tasks(model)
+    out: List[MethodResult] = []
+
+    sa = SimulatedAnnealing(model)
+    t0 = time.time()
+    out.append(MethodResult("SA", None, 0.0, sa.explore_tasks(tasks)))
+
+    drl, t_drl = train_drl_method(model)
+    out.append(MethodResult("DRL", None, t_drl, drl.explore_tasks(tasks)))
+
+    mlp, t_mlp = train_mlp_method(model)
+    out.append(MethodResult("LargeMLP", None, t_mlp, mlp.explore_tasks(tasks)))
+
+    for w in w_critics:
+        g, t_g = train_gan_method(model, w)
+        out.append(MethodResult("GAN", w, t_g, g.explore_tasks(tasks)))
+    return out
+
+
+def write_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path

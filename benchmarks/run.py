@@ -1,0 +1,40 @@
+"""Benchmark aggregator: one sub-bench per paper table/figure plus the
+framework benches (roofline, kernels, beyond-paper mesh DSE).
+
+  PYTHONPATH=src python -m benchmarks.run [--only table5 difficulty ...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = ("kernels", "table5", "difficulty", "distribution", "losses",
+           "mesh_dse", "roofline")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=list(BENCHES))
+    args = ap.parse_args(argv)
+
+    import importlib
+    rc = 0
+    for name in args.only:
+        mod = importlib.import_module(f"benchmarks.bench_{name}")
+        print(f"\n===== bench_{name} =====", flush=True)
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"===== bench_{name} done in {time.time()-t0:.1f}s =====",
+                  flush=True)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            print(f"===== bench_{name} FAILED: {e} =====", flush=True)
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,61 @@
+"""Quickstart: the four GANDSE phases end-to-end on the DnnWeaver template.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Trains the GAN-based design explorer (reduced scale for CPU), then runs a
+DSE task — "accelerator for this conv layer with latency <= LO and power
+<= PO" — and emits the selected configuration artifact (the stand-in for
+the paper's RTL generation phase).
+"""
+import json
+
+import numpy as np
+
+from repro.core.dse_api import GANDSE, parse_network, summarize
+from repro.core.gan import GANConfig
+from repro.dataset.generator import generate_tasks
+from repro.design_models.dnnweaver import DnnWeaverModel
+
+
+def main():
+    # ---- training phase (once per design template) -------------------------
+    model = DnnWeaverModel()
+    gan_cfg = GANConfig(n_net=model.net_space.n_dims, w_critic=1.0).scaled(
+        layers=3, neurons=256, batch_size=512, lr=1e-4)
+    gandse = GANDSE(model, gan_cfg)
+    print("training the design explorer (reduced scale)...")
+    gandse.train(n_data=6000, iters=6, log_every=2)
+
+    # ---- parsing phase ------------------------------------------------------
+    net = parse_network(
+        {"IC": 64, "OC": 128, "OW": 32, "OH": 32, "KW": 3, "KH": 3}, model)
+
+    # pick achievable objectives: evaluate a random config and relax 1.5x
+    rng = np.random.default_rng(0)
+    probe = model.space.sample_indices(rng, 64)
+    lat, pw = model.evaluate_indices(np.repeat(net[None], 64, 0), probe)
+    ok = np.isfinite(lat)
+    lo, po = float(np.median(lat[ok]) * 1.2), float(np.median(pw[ok]) * 1.2)
+    print(f"objectives: latency <= {lo:.4g}s, power <= {po:.4g}W")
+
+    # ---- exploration phase ---------------------------------------------------
+    result = gandse.explore(net, lo, po)
+    print(f"satisfied={result.satisfied} "
+          f"latency={result.selection.latency:.4g}s "
+          f"power={result.selection.power:.4g}W "
+          f"improvement_ratio={result.improvement_ratio} "
+          f"dse_time={result.dse_seconds*1e3:.0f}ms "
+          f"candidates={result.selection.n_candidates}")
+
+    # ---- implementation phase ------------------------------------------------
+    if result.satisfied:
+        artifact = gandse.emit_config(result)
+        print(json.dumps(artifact, indent=1))
+
+    # batch evaluation across random tasks
+    tasks = generate_tasks(model, 50, seed=1)
+    print("batch:", summarize(gandse.explore_tasks(tasks)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.baselines.sa import SimulatedAnnealing  # noqa: F401
+from repro.baselines.mlp import LargeMLP  # noqa: F401
+from repro.baselines.drl import PolicyGradientDRL  # noqa: F401
+from repro.baselines.random_search import RandomSearch  # noqa: F401

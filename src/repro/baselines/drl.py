@@ -1,0 +1,182 @@
+"""Deep-reinforcement-learning DSE baseline (paper §7.1.4, ConfuciuX-style).
+
+Policy-gradient (REINFORCE with a moving baseline).  The state is the
+current (network parameters, objectives, configuration); actions set one
+configuration dimension to one of its choices; the reward is the decrease
+in objective violation, with a bonus when the state satisfies the
+objectives.  An MLP actor is trained offline over dataset-derived tasks;
+at DSE time a short greedy rollout is run and the best visited
+configuration is returned (iterative DSE, but with a learned policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selector import Selection
+from repro.core.dse_api import DSEResult
+from repro.core.train import encode_batch
+from repro.dataset.generator import Dataset, DSETask, generate_dataset
+from repro.design_models.base import DesignModel
+from repro.nn import layers as L
+from repro.optim import adam, apply_updates
+
+
+def _violation(lat, pw, lo, po):
+    lat = np.nan_to_num(lat, posinf=1e9)
+    pw = np.nan_to_num(pw, posinf=1e9)
+    return np.maximum(0.0, (lat - lo) / lo) + np.maximum(0.0, (pw - po) / po)
+
+
+@dataclasses.dataclass
+class PolicyGradientDRL:
+    model: DesignModel
+    hidden_layers: int = 3
+    neurons: int = 256
+    lr: float = 1e-4
+    rollout_len: int = 16
+    batch_tasks: int = 64
+    gamma: float = 0.95
+    sat_bonus: float = 2.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self.ds: Optional[Dataset] = None
+        self.params = None
+        space = self.model.space
+        self._n_actions = space.onehot_width  # action = (dim, choice) flattened
+
+        @jax.jit
+        def policy_logits(params, net_enc, obj_enc, cfg_onehot):
+            x = jnp.concatenate([net_enc, obj_enc, cfg_onehot], axis=-1)
+            return L.mlp_apply(params, x)
+
+        self._logits = policy_logits
+
+    # --- helpers -------------------------------------------------------------
+    def _apply_actions(self, cfg_idx: np.ndarray, actions: np.ndarray) -> np.ndarray:
+        """actions: flat indices into onehot_width -> set (dim, choice)."""
+        space = self.model.space
+        out = cfg_idx.copy()
+        off = 0
+        for di, d in enumerate(space.dims):
+            in_group = (actions >= off) & (actions < off + d.n)
+            out[in_group, di] = actions[in_group] - off
+            off += d.n
+        return out
+
+    def train(self, n_data: int, iters: int, seed: int = 0,
+              ds: Optional[Dataset] = None, log_every: int = 0):
+        self.ds = ds if ds is not None else generate_dataset(self.model, n_data, seed=seed)
+        space = self.model.space
+        n_in = self.model.net_space.n_dims + 2 + space.onehot_width
+        rng = jax.random.PRNGKey(seed)
+        self.params = L.mlp_init(rng, n_in, [self.neurons] * self.hidden_layers,
+                                 self._n_actions)
+        optim = adam(self.lr)
+        opt = optim.init(self.params)
+
+        def pg_loss(params, states, actions, advantages):
+            logits = self._logits(params, *states)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            act_logp = jnp.take_along_axis(logp, actions[:, None], axis=-1)[:, 0]
+            return -jnp.mean(act_logp * advantages)
+
+        @jax.jit
+        def update(params, opt, states, actions, advantages):
+            loss, grads = jax.value_and_grad(pg_loss)(params, states, actions, advantages)
+            upd, opt = optim.update(grads, opt)
+            return apply_updates(params, upd), opt, loss
+
+        np_rng = np.random.default_rng(seed)
+        baseline = 0.0
+        for it in range(iters):
+            # sample a batch of tasks from the dataset rows
+            rows = np_rng.integers(0, self.ds.n, self.batch_tasks)
+            b = encode_batch(self.model, self.ds, rows)
+            net_idx = b["net_idx"]
+            lo, po = b["lat_obj"], b["pow_obj"]
+            cfg = space.sample_indices(np_rng, self.batch_tasks)
+            lat, pw = self.model.evaluate_indices(net_idx, cfg)
+            viol = _violation(lat, pw, lo, po)
+
+            traj_states, traj_actions, traj_rewards = [], [], []
+            for t in range(self.rollout_len):
+                cfg_oh = space.onehot_from_indices(cfg)
+                states = (jnp.asarray(b["net_enc"]), jnp.asarray(b["obj_enc"]),
+                          jnp.asarray(cfg_oh))
+                logits = np.asarray(self._logits(self.params, *states))
+                # sample actions
+                z = np_rng.gumbel(size=logits.shape)
+                actions = np.argmax(logits + z, axis=-1).astype(np.int64)
+                new_cfg = self._apply_actions(cfg, actions)
+                lat, pw = self.model.evaluate_indices(net_idx, new_cfg)
+                new_viol = _violation(lat, pw, lo, po)
+                reward = (viol - new_viol) + self.sat_bonus * (new_viol == 0.0)
+                traj_states.append(states)
+                traj_actions.append(actions)
+                traj_rewards.append(reward)
+                cfg, viol = new_cfg, new_viol
+
+            # discounted returns
+            ret = np.zeros_like(traj_rewards[0])
+            all_s, all_a, all_adv = [], [], []
+            for t in reversed(range(self.rollout_len)):
+                ret = traj_rewards[t] + self.gamma * ret
+                all_s.append(traj_states[t])
+                all_a.append(traj_actions[t])
+                all_adv.append(ret.copy())
+            adv = np.concatenate(all_adv)
+            baseline = 0.9 * baseline + 0.1 * float(adv.mean())
+            adv = (adv - baseline) / (adv.std() + 1e-6)
+            states = tuple(jnp.concatenate([s[i] for s in all_s]) for i in range(3))
+            actions = jnp.asarray(np.concatenate(all_a))
+            self.params, opt, loss = update(self.params, opt, states, actions,
+                                            jnp.asarray(adv, jnp.float32))
+            if log_every and it % log_every == 0:
+                print(f"[drl] iter={it} loss={float(loss):.4f} "
+                      f"final_viol={viol.mean():.4f} sat={(viol == 0).mean():.3f}")
+        return self
+
+    def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
+                seed: int = 0) -> DSEResult:
+        t0 = time.time()
+        space = self.model.space
+        rng = np.random.default_rng(seed)
+        lo, po = float(lat_obj), float(pow_obj)
+        net_enc = self.ds.net_encoded(self.model, np.atleast_2d(net_idx))
+        obj_enc = self.ds.obj_encoded([lo], [po])
+        cfg = space.sample_indices(rng, 1)
+        lat, pw = self.model.evaluate_indices(net_idx[None], cfg)
+        best = (cfg[0].copy(), float(lat[0]), float(pw[0]),
+                float(_violation(lat, pw, lo, po)[0]))
+        n_eval = 1
+        for t in range(self.rollout_len):
+            cfg_oh = space.onehot_from_indices(cfg)
+            logits = np.asarray(self._logits(self.params, jnp.asarray(net_enc),
+                                             jnp.asarray(obj_enc), jnp.asarray(cfg_oh)))
+            actions = np.argmax(logits, axis=-1)  # greedy at DSE time
+            if t > 0 and rng.random() < 0.3:      # light exploration
+                actions = np.array([rng.integers(0, self._n_actions)])
+            cfg = self._apply_actions(cfg, actions)
+            lat, pw = self.model.evaluate_indices(net_idx[None], cfg)
+            n_eval += 1
+            v = float(_violation(lat, pw, lo, po)[0])
+            l_, p_ = float(lat[0]), float(pw[0])
+            if v < best[3] or (v == best[3] and np.isfinite(l_) and l_ + p_ < best[1] + best[2]):
+                best = (cfg[0].copy(), l_, p_, v)
+        c, bl, bp, bv = best
+        satisfied = np.isfinite(bl) and bl <= lo * 1.01 and bp <= po * 1.01
+        sel = Selection(cfg_idx=c, latency=bl, power=bp, satisfied=bool(satisfied),
+                        n_candidates=n_eval)
+        return DSEResult(sel, lo, po, time.time() - t0)
+
+    def explore_tasks(self, tasks: DSETask, seed: int = 0):
+        return [self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
+                             seed=seed + i)
+                for i in range(tasks.net_idx.shape[0])]

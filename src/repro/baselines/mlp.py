@@ -1,0 +1,111 @@
+"""Large-MLP DSE baseline (paper §7.1.4, AIRCHITECT-style, Fig. 3(a)).
+
+A single MLP regresses from (net params, objectives) to the training-set
+configurations with plain per-group cross entropy — no satisfaction mask,
+no discriminator.  Parameter count is matched to the full GAN (G + D) by
+construction ("much larger than the G in the GAN").  The design selector
+(Algorithm 2) is applied to its thresholded outputs, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gan as G
+from repro.core.explorer import ExplorerConfig, enumerate_candidates
+from repro.core.selector import select
+from repro.core.dse_api import DSEResult
+from repro.core.train import encode_batch
+from repro.dataset.generator import Dataset, DSETask, generate_dataset
+from repro.design_models.base import DesignModel
+from repro.nn import layers as L
+from repro.optim import adam, apply_updates
+
+
+@dataclasses.dataclass
+class LargeMLP:
+    model: DesignModel
+    hidden_layers: int = 16           # parameter-matched to G+D
+    neurons: int = 2048
+    lr: float = 2e-5
+    batch_size: int = 1024
+    noise_dim: int = 8
+    explorer_cfg: ExplorerConfig = dataclasses.field(default_factory=ExplorerConfig)
+
+    def __post_init__(self):
+        self.ds: Optional[Dataset] = None
+        self.params = None
+        space = self.model.space
+
+        @jax.jit
+        def fwd(params, net_enc, obj_enc, noise):
+            x = jnp.concatenate([net_enc, obj_enc, noise], axis=-1)
+            logits = L.mlp_apply(params, x)
+            probs = [jax.nn.softmax(g, -1) for g in space.split_groups(logits)]
+            return jnp.concatenate(probs, axis=-1)
+
+        self._fwd = fwd
+
+    def n_params(self) -> int:
+        return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(self.params))
+
+    def train(self, n_data: int, iters: int, seed: int = 0,
+              ds: Optional[Dataset] = None, log_every: int = 0):
+        self.ds = ds if ds is not None else generate_dataset(self.model, n_data, seed=seed)
+        space = self.model.space
+        n_in = self.model.net_space.n_dims + 2 + self.noise_dim
+        rng = jax.random.PRNGKey(seed)
+        self.params = L.mlp_init(rng, n_in, [self.neurons] * self.hidden_layers,
+                                 space.onehot_width)
+        optim = adam(self.lr)
+        opt = optim.init(self.params)
+
+        def loss_fn(params, batch, noise):
+            probs = self._fwd(params, batch["net_enc"], batch["obj_enc"], noise)
+            return jnp.mean(G.grouped_cross_entropy(space, batch["cfg_onehot"], probs))
+
+        @jax.jit
+        def step(params, opt, batch, rng):
+            rng, nrng = jax.random.split(rng)
+            noise = jax.random.uniform(nrng, (batch["net_enc"].shape[0], self.noise_dim),
+                                       jnp.float32, -0.1, 0.1)
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, noise)
+            upd, opt = optim.update(grads, opt)
+            return apply_updates(params, upd), opt, rng, loss
+
+        np_rng = np.random.default_rng(seed)
+        n = self.ds.n
+        bs = min(self.batch_size, n)
+        for it in range(iters):
+            perm = np_rng.permutation(n)
+            for b0 in range(0, n - bs + 1, bs):
+                batch = {k: jnp.asarray(v) for k, v in
+                         encode_batch(self.model, self.ds, perm[b0:b0 + bs]).items()}
+                self.params, opt, rng, loss = step(self.params, opt, batch, rng)
+            if log_every and it % log_every == 0:
+                print(f"[large_mlp] iter={it} loss={float(loss):.4f}")
+        return self
+
+    def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
+                seed: int = 0) -> DSEResult:
+        t0 = time.time()
+        net_enc = self.ds.net_encoded(self.model, np.atleast_2d(net_idx))
+        obj_enc = self.ds.obj_encoded(np.atleast_1d(lat_obj), np.atleast_1d(pow_obj))
+        noise = jnp.zeros((1, self.noise_dim), jnp.float32)
+        probs = np.asarray(self._fwd(self.params, jnp.asarray(net_enc),
+                                     jnp.asarray(obj_enc), noise))[0]
+        cands = enumerate_candidates(self.model.space, probs,
+                                     self.explorer_cfg.prob_threshold,
+                                     self.explorer_cfg.max_candidates)
+        sel = select(self.model, net_idx, cands, lat_obj, pow_obj)
+        return DSEResult(sel, float(lat_obj), float(pow_obj), time.time() - t0)
+
+    def explore_tasks(self, tasks: DSETask, seed: int = 0):
+        return [self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
+                             seed=seed + i)
+                for i in range(tasks.net_idx.shape[0])]

@@ -1,0 +1,36 @@
+"""Random-search DSE baseline (sanity floor, not in the paper's table).
+
+Uniformly samples N configurations and applies the Algorithm 2 selector.
+Useful as the weakest-reasonable baseline and in property tests (any
+learned method should beat it at equal evaluation budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.selector import select
+from repro.core.dse_api import DSEResult
+from repro.dataset.generator import DSETask
+from repro.design_models.base import DesignModel
+
+
+@dataclasses.dataclass
+class RandomSearch:
+    model: DesignModel
+    n_samples: int = 256
+
+    def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
+                seed: int = 0) -> DSEResult:
+        t0 = time.time()
+        rng = np.random.default_rng(seed)
+        cands = self.model.space.sample_indices(rng, self.n_samples)
+        sel = select(self.model, net_idx, cands, lat_obj, pow_obj)
+        return DSEResult(sel, float(lat_obj), float(pow_obj), time.time() - t0)
+
+    def explore_tasks(self, tasks: DSETask, seed: int = 0):
+        return [self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
+                             seed=seed + i)
+                for i in range(tasks.net_idx.shape[0])]

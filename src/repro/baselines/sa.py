@@ -1,0 +1,80 @@
+"""Simulated annealing DSE baseline (paper §7.1.4).
+
+Iterative DSE in the classic Fig. 1 loop: the configuration-updating
+algorithm is SA over the discrete choice indices; the design model scores
+each visited configuration.  "SA terminates once the user's objectives are
+satisfied, or the temperature is 3e-8 x the initial one."
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.selector import Selection
+from repro.core.dse_api import DSEResult
+from repro.dataset.generator import DSETask
+from repro.design_models.base import DesignModel
+
+
+def _violation(lat, pw, lo, po):
+    return max(0.0, (lat - lo) / lo) + max(0.0, (pw - po) / po)
+
+
+@dataclasses.dataclass
+class SimulatedAnnealing:
+    model: DesignModel
+    t_init: float = 1.0
+    t_stop_frac: float = 3e-8
+    cooling: float = 0.95
+    steps_per_temp: int = 4
+    seed: int = 0
+
+    def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
+                seed: Optional[int] = None) -> DSEResult:
+        rng = np.random.default_rng(self.seed if seed is None else seed)
+        space = self.model.space
+        t0 = time.time()
+        lo, po = float(lat_obj), float(pow_obj)
+
+        cur = space.sample_indices(rng, 1)[0]
+        lat, pw = self.model.evaluate_indices(net_idx[None], cur[None])
+        cur_l, cur_p = float(lat[0]), float(pw[0])
+        cur_e = _violation(cur_l, cur_p, lo, po) if np.isfinite(cur_l) else 1e9
+        best = (cur.copy(), cur_l, cur_p, cur_e)
+        n_eval = 1
+
+        temp = self.t_init
+        while temp > self.t_init * self.t_stop_frac and best[3] > 0.0:
+            for _ in range(self.steps_per_temp):
+                nxt = cur.copy()
+                d = rng.integers(0, space.n_dims)
+                if rng.random() < 0.5:  # local move
+                    nxt[d] = int(np.clip(nxt[d] + rng.choice([-1, 1]), 0,
+                                         space.dims[d].n - 1))
+                else:                   # random re-draw
+                    nxt[d] = rng.integers(0, space.dims[d].n)
+                lat, pw = self.model.evaluate_indices(net_idx[None], nxt[None])
+                n_eval += 1
+                nl, np_ = float(lat[0]), float(pw[0])
+                e = _violation(nl, np_, lo, po) if np.isfinite(nl) else 1e9
+                if e < cur_e or rng.random() < np.exp(-(e - cur_e) / max(temp, 1e-12)):
+                    cur, cur_l, cur_p, cur_e = nxt, nl, np_, e
+                    if e < best[3] or (e == best[3] and nl + np_ < best[1] + best[2]):
+                        best = (cur.copy(), cur_l, cur_p, e)
+                if best[3] == 0.0:
+                    break
+            temp *= self.cooling
+
+        cfg, bl, bp, be = best
+        satisfied = bl <= lo * 1.01 and bp <= po * 1.01
+        sel = Selection(cfg_idx=cfg, latency=bl, power=bp,
+                        satisfied=bool(satisfied), n_candidates=n_eval)
+        return DSEResult(sel, lo, po, time.time() - t0)
+
+    def explore_tasks(self, tasks: DSETask, seed: int = 0):
+        return [self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
+                             seed=seed + i)
+                for i in range(tasks.net_idx.shape[0])]

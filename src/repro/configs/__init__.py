@@ -1,0 +1,55 @@
+"""Architecture registry: ``get_arch(name)`` / ``get_reduced(name)``.
+
+Every assigned architecture is a module exposing FULL and REDUCED
+ModelCfg objects; shapes live in ``repro.configs.shapes``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+_ARCHS = (
+    "mixtral_8x7b",
+    "phi35_moe",
+    "stablelm_1_6b",
+    "qwen3_14b",
+    "gemma3_1b",
+    "deepseek_coder_33b",
+    "qwen2_vl_7b",
+    "whisper_small",
+    "xlstm_1_3b",
+    "hymba_1_5b",
+)
+
+_ALIASES = {
+    "mixtral-8x7b": "mixtral_8x7b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "qwen3-14b": "qwen3_14b",
+    "gemma3-1b": "gemma3_1b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "whisper-small": "whisper_small",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def list_archs() -> List[str]:
+    return list(_ARCHS)
+
+
+def _module(name: str):
+    return importlib.import_module(f"repro.configs.{canonical(name)}")
+
+
+def get_arch(name: str):
+    return _module(name).FULL
+
+
+def get_reduced(name: str):
+    return _module(name).REDUCED

@@ -1,0 +1,21 @@
+"""qwen2-vl-7b [vlm] — 28L d=3584 28H (GQA kv=4) d_ff=18944 vocab=152064,
+M-RoPE (temporal/height/width rotary sections), dynamic resolution.
+[arXiv:2409.12191]
+
+The vision patch frontend is a STUB: input_specs() provides token ids plus
+(3, B, S) M-RoPE position ids (all-equal for text positions; precomputed
+patch embeddings would be summed into the embedding stream by the real
+frontend)."""
+from repro.models.builders import decoder_arch
+
+FULL = decoder_arch(
+    "qwen2-vl-7b", "vlm", 28, 3584, 28, 4, 18944, 152064,
+    head_dim=128, mrope=(16, 24, 24), tied=False, theta=1e6,
+    notes="pure full attention -> long_500k skipped (DESIGN.md §4); "
+          "M-RoPE sections (16,24,24) over the 64 rotary half-dims",
+)
+
+REDUCED = decoder_arch(
+    "qwen2-vl-reduced", "vlm", 2, 64, 4, 2, 128, 512,
+    head_dim=16, mrope=(2, 3, 3), tied=False,
+)

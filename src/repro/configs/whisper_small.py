@@ -1,0 +1,23 @@
+"""whisper-small [audio] — 12L enc + 12L dec, d=768 12H (kv=12) d_ff=3072
+vocab=51865, enc-dec with conv frontend STUB.  [arXiv:2212.04356]
+
+input_specs() provides precomputed frame embeddings (B, S_enc, D) — the
+two conv layers of the real frontend halve the mel frame count; the stub
+hands the backbone the post-conv sequence directly.  Shape mapping (see
+DESIGN.md §4): the cell's seq_len is the ENCODER frame length; the decoder
+runs its native 448-token context for training and the cell's KV length
+for decode cells."""
+from repro.models.builders import encdec_arch
+
+FULL = encdec_arch(
+    "whisper-small", 12, 12, 768, 12, 12, 3072, 51865,
+    max_enc_len=1500, tied=True,
+    notes="enc-dec; long_500k skipped (full-attention enc-dec family)",
+)
+
+REDUCED = encdec_arch(
+    "whisper-small-reduced", 2, 2, 64, 4, 4, 128, 512,
+    max_enc_len=64, tied=True,
+)
+
+DECODER_TRAIN_LEN = 448

@@ -1,0 +1,29 @@
+"""GANDSE core: the paper's primary contribution (GAN-based DSE).
+
+Lazy re-exports to avoid import cycles (design_models depends on
+core.encoding; dse_api depends on design_models).
+"""
+_EXPORTS = {
+    "GANDSE": ("repro.core.dse_api", "GANDSE"),
+    "DSEResult": ("repro.core.dse_api", "DSEResult"),
+    "parse_network": ("repro.core.dse_api", "parse_network"),
+    "summarize": ("repro.core.dse_api", "summarize"),
+    "GANConfig": ("repro.core.gan", "GANConfig"),
+    "Explorer": ("repro.core.explorer", "Explorer"),
+    "ExplorerConfig": ("repro.core.explorer", "ExplorerConfig"),
+    "Selection": ("repro.core.selector", "Selection"),
+    "select": ("repro.core.selector", "select"),
+    "ConfigSpace": ("repro.core.encoding", "ConfigSpace"),
+    "ConfigDim": ("repro.core.encoding", "ConfigDim"),
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        mod, attr = _EXPORTS[name]
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(name)

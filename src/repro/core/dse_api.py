@@ -1,0 +1,126 @@
+"""High-level GANDSE API: the four phases of Fig. 4.
+
+- Training phase: ``GANDSE.train`` (once per design template / design model)
+- Parsing phase:  ``parse_network`` (abstract layer description -> net params)
+- Exploration:    ``GANDSE.explore`` (G inference -> candidates -> Algorithm 2)
+- Implementation: ``GANDSE.emit_config`` (structured artifact; stands in for
+  the paper's RTL generator, see DESIGN.md §2)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import gan as G
+from repro.core.explorer import Explorer, ExplorerConfig
+from repro.core.selector import Selection, select
+from repro.core.train import TrainState, train_gan
+from repro.dataset.generator import Dataset, DSETask, generate_dataset
+from repro.design_models.base import DesignModel
+
+
+def parse_network(desc: Dict[str, float], model: DesignModel) -> np.ndarray:
+    """Parsing phase: {'IC':64, 'OC':32, ...} -> net-space indices.
+
+    Values are snapped to the nearest legal sampled value (the dataset
+    generator covers the space evenly, §7.1.2).
+    """
+    names = [d.name for d in model.net_space.dims]
+    vals = np.array([[float(desc[n]) for n in names]])
+    return model.net_space.indices_from_values(vals)[0]
+
+
+@dataclasses.dataclass
+class DSEResult:
+    selection: Selection
+    lat_obj: float
+    pow_obj: float
+    dse_seconds: float
+
+    @property
+    def satisfied(self) -> bool:
+        return self.selection.satisfied
+
+    @property
+    def improvement_ratio(self) -> Optional[float]:
+        return self.selection.improvement_ratio(self.lat_obj, self.pow_obj)
+
+
+class GANDSE:
+    """End-to-end framework object for one design template (design model)."""
+
+    def __init__(self, model: DesignModel, gan_cfg: Optional[G.GANConfig] = None,
+                 explorer_cfg: Optional[ExplorerConfig] = None):
+        self.model = model
+        n_net = model.net_space.n_dims
+        self.gan_cfg = gan_cfg or G.GANConfig(n_net=n_net)
+        assert self.gan_cfg.n_net == n_net
+        self.explorer_cfg = explorer_cfg or ExplorerConfig()
+        self.ds: Optional[Dataset] = None
+        self.state: Optional[TrainState] = None
+        self._explorer: Optional[Explorer] = None
+
+    # ---- training phase ----------------------------------------------------
+    def train(self, n_data: int, iters: int, seed: int = 0, log_every: int = 0,
+              ds: Optional[Dataset] = None) -> TrainState:
+        self.ds = ds if ds is not None else generate_dataset(self.model, n_data, seed=seed)
+        self.state = train_gan(self.model, self.ds, self.gan_cfg, iters=iters,
+                               seed=seed, log_every=log_every)
+        self._explorer = Explorer(self.model, self.ds, self.state.g_params,
+                                  self.gan_cfg, self.explorer_cfg)
+        return self.state
+
+    # ---- exploration phase ---------------------------------------------------
+    def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
+                seed: int = 0) -> DSEResult:
+        assert self._explorer is not None, "call train() first"
+        t0 = time.time()
+        cands = self._explorer.candidates(net_idx, lat_obj, pow_obj, seed=seed)
+        sel = select(self.model, net_idx, cands, lat_obj, pow_obj)
+        return DSEResult(sel, float(lat_obj), float(pow_obj), time.time() - t0)
+
+    def explore_tasks(self, tasks: DSETask, seed: int = 0) -> List[DSEResult]:
+        return [
+            self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
+                         seed=seed + i)
+            for i in range(tasks.net_idx.shape[0])
+        ]
+
+    # ---- implementation phase ------------------------------------------------
+    def emit_config(self, result: DSEResult) -> Dict:
+        """Structured design artifact (stands in for RTL emission)."""
+        sel = result.selection
+        assert sel.cfg_idx is not None
+        vals = self.model.space.values_from_indices(sel.cfg_idx[None])[0]
+        return {
+            "design_model": self.model.name,
+            "config": {d.name: v for d, v in zip(self.model.space.dims, vals.tolist())},
+            "predicted": {"latency_s": sel.latency, "power_w": sel.power},
+            "objectives": {"latency_s": result.lat_obj, "power_w": result.pow_obj},
+            "satisfied": sel.satisfied,
+        }
+
+
+def summarize(results: Sequence[DSEResult]) -> Dict[str, float]:
+    """Table-5-style metrics: satisfied count, improvement ratio, DSE time,
+    candidate count, error stds (Fig. 5)."""
+    n = len(results)
+    sat = [r for r in results if r.satisfied]
+    irs = [r.improvement_ratio for r in sat if r.improvement_ratio is not None]
+    lerr = [ (r.selection.latency - r.lat_obj) / r.lat_obj
+             for r in results if np.isfinite(r.selection.latency) ]
+    perr = [ (r.selection.power - r.pow_obj) / r.pow_obj
+             for r in results if np.isfinite(r.selection.power) ]
+    return {
+        "n_tasks": n,
+        "n_satisfied": len(sat),
+        "improvement_ratio": float(np.mean(irs)) if irs else float("nan"),
+        "dse_time_s": float(np.mean([r.dse_seconds for r in results])),
+        "n_candidates": float(np.mean([r.selection.n_candidates for r in results])),
+        "lat_err_std": float(np.std(lerr)) if lerr else float("nan"),
+        "pow_err_std": float(np.std(perr)) if perr else float("nan"),
+    }

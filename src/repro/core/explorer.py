@@ -1,0 +1,120 @@
+"""Design Explorer — GAN inference + candidate configuration sets (§6.1).
+
+"For each configuration, if the one-hot output of one choice exceeds the
+probability threshold, the choice is employed.  Then the candidate
+configuration sets are the combinations of all the employed choices of all
+the configurations."
+
+The cartesian product can explode combinatorially; we cap it at
+``max_candidates`` by greedily trimming the lowest-probability employed
+choices (argmax choices are never trimmed), which preserves the paper's
+behaviour for realistic thresholds while bounding memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gan as G
+from repro.core.encoding import ConfigSpace, binary_log2_encode
+from repro.dataset.generator import Dataset
+from repro.design_models.base import DesignModel
+
+
+@dataclasses.dataclass
+class ExplorerConfig:
+    prob_threshold: float = 0.2
+    max_candidates: int = 4096
+    noise_samples: int = 1     # forward passes with independent noise
+
+
+def _employed_choices(probs_g: np.ndarray, thresh: float) -> List[np.ndarray]:
+    """Per group: indices of choices above threshold (argmax always kept)."""
+    out = []
+    for g in probs_g:
+        keep = np.flatnonzero(g > thresh)
+        if keep.size == 0:
+            keep = np.array([int(np.argmax(g))])
+        out.append(keep)
+    return out
+
+
+def enumerate_candidates(
+    space: ConfigSpace,
+    probs: np.ndarray,
+    thresh: float,
+    max_candidates: int,
+) -> np.ndarray:
+    """probs: (onehot_width,) -> (C, n_dims) int candidate index matrix."""
+    groups = [np.asarray(g) for g in space.split_groups(probs)]
+    employed = _employed_choices(groups, thresh)
+
+    # cap the cartesian product: repeatedly drop the globally least-probable
+    # non-argmax employed choice until the product fits.
+    def product_size(emp):
+        s = 1
+        for e in emp:
+            s *= len(e)
+        return s
+
+    while product_size(employed) > max_candidates:
+        worst_g, worst_i, worst_p = -1, -1, np.inf
+        for gi, (g, e) in enumerate(zip(groups, employed)):
+            if len(e) <= 1:
+                continue
+            am = int(np.argmax(g))
+            for ci in e:
+                if ci == am:
+                    continue
+                if g[ci] < worst_p:
+                    worst_g, worst_i, worst_p = gi, ci, g[ci]
+        if worst_g < 0:
+            break
+        employed[worst_g] = employed[worst_g][employed[worst_g] != worst_i]
+
+    combos = np.array(list(itertools.product(*employed)), dtype=np.int32)
+    return combos
+
+
+@dataclasses.dataclass
+class Explorer:
+    """Trained-G wrapper: task -> candidate configuration sets."""
+
+    model: DesignModel
+    ds: Dataset                 # carries the normalizers
+    g_params: dict
+    gan_cfg: G.GANConfig
+    cfg: ExplorerConfig = dataclasses.field(default_factory=ExplorerConfig)
+
+    def __post_init__(self):
+        space = self.model.space
+
+        @jax.jit
+        def fwd(g_params, net_enc, obj_enc, noise):
+            return G.generator_apply(g_params, space, net_enc, obj_enc, noise)
+
+        self._fwd = fwd
+
+    def generator_probs(self, net_idx: np.ndarray, lat_obj, pow_obj, seed: int = 0):
+        """Batched G forward: (T, onehot_width) mean probs over noise draws."""
+        net_enc = self.ds.net_encoded(self.model, np.atleast_2d(net_idx))
+        obj_enc = self.ds.obj_encoded(np.atleast_1d(lat_obj), np.atleast_1d(pow_obj))
+        rng = jax.random.PRNGKey(seed)
+        acc = None
+        for i in range(self.cfg.noise_samples):
+            noise = G.sample_noise(jax.random.fold_in(rng, i), net_enc.shape[0], self.gan_cfg)
+            p = self._fwd(self.g_params, jnp.asarray(net_enc), jnp.asarray(obj_enc), noise)
+            acc = p if acc is None else acc + p
+        return np.asarray(acc) / self.cfg.noise_samples
+
+    def candidates(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
+                   seed: int = 0) -> np.ndarray:
+        probs = self.generator_probs(net_idx, lat_obj, pow_obj, seed)[0]
+        return enumerate_candidates(
+            self.model.space, probs, self.cfg.prob_threshold, self.cfg.max_candidates
+        )

@@ -1,0 +1,116 @@
+"""The conditional GAN of GANDSE (paper §4, §6.1, Table 4).
+
+Generator  G(net_params, objectives, noise) -> per-config-group one-hot
+           probability distributions (softmax per group).
+Discriminator D(net_params, config_onehot, objectives) -> satisfaction
+           logits (2-class one-hot, like other classification tasks).
+
+Both are multilayer perceptrons with ReLU activations and Adam optimizers
+(Table 4).  Params are pure pytrees; everything jit-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import ConfigSpace
+from repro.nn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class GANConfig:
+    """Hyperparameters (paper Table 4; reduced defaults for CPU CI)."""
+
+    n_net: int                    # encoded network-parameter width
+    n_obj: int = 2                # latency + power objectives
+    noise_dim: int = 8            # "small random numbers as noise"
+    g_hidden_layers: int = 11
+    g_neurons: int = 2048
+    d_hidden_layers: int = 11
+    d_neurons: int = 2048
+    g_lr: float = 2e-5
+    d_lr: float = 2e-5
+    w_critic: float = 0.5
+    batch_size: int = 1024
+    dtype: str = "float32"
+
+    def scaled(self, layers: int, neurons: int, lr: float | None = None,
+               batch_size: int | None = None) -> "GANConfig":
+        """Reduced-scale variant (CPU CI); same algorithm."""
+        return dataclasses.replace(
+            self,
+            g_hidden_layers=layers, d_hidden_layers=layers,
+            g_neurons=neurons, d_neurons=neurons,
+            g_lr=lr or self.g_lr, d_lr=lr or self.d_lr,
+            batch_size=batch_size or self.batch_size,
+        )
+
+
+def init_generator(rng, cfg: GANConfig, space: ConfigSpace):
+    in_dim = cfg.n_net + cfg.n_obj + cfg.noise_dim
+    hidden = [cfg.g_neurons] * cfg.g_hidden_layers
+    return L.mlp_init(rng, in_dim, hidden, space.onehot_width)
+
+
+def init_discriminator(rng, cfg: GANConfig, space: ConfigSpace):
+    in_dim = cfg.n_net + space.onehot_width + cfg.n_obj
+    hidden = [cfg.d_neurons] * cfg.d_hidden_layers
+    return L.mlp_init(rng, in_dim, hidden, 2)
+
+
+def generator_apply(params, space: ConfigSpace, net_enc, obj_enc, noise,
+                    use_fused: bool = False):
+    """Returns (B, onehot_width) per-group softmax probabilities."""
+    x = jnp.concatenate([net_enc, obj_enc, noise], axis=-1)
+    logits = L.mlp_apply(params, x, use_fused=use_fused)
+    probs = [jax.nn.softmax(g, axis=-1) for g in space.split_groups(logits)]
+    return jnp.concatenate(probs, axis=-1)
+
+
+def discriminator_apply(params, net_enc, cfg_onehot, obj_enc,
+                        use_fused: bool = False):
+    """Returns (B, 2) satisfaction logits ([False, True] classes)."""
+    x = jnp.concatenate([net_enc, cfg_onehot, obj_enc], axis=-1)
+    return L.mlp_apply(params, x, use_fused=use_fused)
+
+
+def sample_noise(rng, batch: int, cfg: GANConfig):
+    return jax.random.uniform(rng, (batch, cfg.noise_dim), jnp.float32, -0.1, 0.1)
+
+
+# ---------------------------------------------------------------------------
+# losses (all cross-entropy, §6.1)
+# ---------------------------------------------------------------------------
+def grouped_cross_entropy(space: ConfigSpace, target_onehot, probs) -> jnp.ndarray:
+    """E(Config_s, Config_g): summed per-group CE between the dataset
+    config (one-hot) and G's per-group distributions.  (B,)"""
+    eps = 1e-9
+    out = 0.0
+    for tg, pg in zip(space.split_groups(target_onehot), space.split_groups(probs)):
+        out = out - jnp.sum(tg * jnp.log(pg + eps), axis=-1)
+    return out
+
+
+def satisfaction_ce(logits, sat_true: jnp.ndarray) -> jnp.ndarray:
+    """E(Sat, label): 2-class CE; sat_true is bool/float (B,). (B,)"""
+    labels = jnp.stack([1.0 - sat_true, sat_true], axis=-1)  # [False, True]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(labels * logp, axis=-1)
+
+
+def decode_hard(space: ConfigSpace, probs):
+    """Per-group argmax -> (B, n_dims) int32 choice indices (jnp)."""
+    idx = [jnp.argmax(g, axis=-1) for g in space.split_groups(probs)]
+    return jnp.stack(idx, axis=-1).astype(jnp.int32)
+
+
+def indices_to_values(space: ConfigSpace, idx):
+    """jnp version of ConfigSpace.values_from_indices (constant tables)."""
+    cols = []
+    for i, d in enumerate(space.dims):
+        table = jnp.asarray(d.choices, jnp.float32)
+        cols.append(jnp.take(table, idx[..., i]))
+    return jnp.stack(cols, axis=-1)

@@ -1,0 +1,88 @@
+"""Design Selector — Algorithm 2 (paper §6.2), exactly as published.
+
+Scans the candidate configuration sets, keeping (L_opt, P_opt) and the
+priority rules:
+  scenario 1: both current objectives satisfied or both unsatisfied ->
+              update only if the candidate improves BOTH;
+  scenario 2: latency unsatisfied, power satisfied -> update if candidate
+              improves latency while its power still satisfies PO;
+  scenario 3: symmetric to 2.
+
+The candidate metric evaluation is vectorized over the whole candidate set
+(one design-model call); only the order-dependent update chain is a scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.design_models.base import DesignModel
+
+
+@dataclasses.dataclass
+class Selection:
+    cfg_idx: Optional[np.ndarray]   # (n_dims,) chosen config indices or None
+    latency: float
+    power: float
+    satisfied: bool
+    n_candidates: int
+
+    def improvement_ratio(self, lo: float, po: float) -> Optional[float]:
+        """sqrt(1/2 ((L-LO)/LO)^2 + 1/2 ((P-PO)/PO)^2) when satisfied (§7.2)."""
+        if not self.satisfied:
+            return None
+        return float(np.sqrt(0.5 * (((self.latency - lo) / lo) ** 2
+                                    + ((self.power - po) / po) ** 2)))
+
+
+def select(
+    model: DesignModel,
+    net_idx: np.ndarray,
+    cand_idx: np.ndarray,
+    lat_obj: float,
+    pow_obj: float,
+    noise_tol: float = 0.01,
+) -> Selection:
+    """Run Algorithm 2 over the candidate set for one DSE task.
+
+    noise_tol: the paper allows 1% noise when judging satisfaction (§7.2);
+    it only affects the reported `satisfied` flag, not the selection chain.
+    """
+    if cand_idx.size == 0:
+        return Selection(None, np.inf, np.inf, False, 0)
+    net = np.repeat(np.atleast_2d(net_idx), cand_idx.shape[0], axis=0)
+    lat, pw = model.evaluate_indices(net, cand_idx)      # vectorized (lines 4-5)
+
+    lo, po = float(lat_obj), float(pow_obj)
+    l_opt, p_opt, chosen = 0.0, 0.0, -1
+    for i in range(cand_idx.shape[0]):
+        lg, pg = float(lat[i]), float(pw[i])
+        if not (np.isfinite(lg) and np.isfinite(pg)):
+            continue
+        update = False
+        if l_opt == 0.0 and p_opt == 0.0:                 # lines 7-8 (init)
+            update = True
+        elif (l_opt > lo and p_opt > po) or (l_opt < lo and p_opt < po):
+            if lg < l_opt and pg < p_opt:                  # lines 10-13
+                update = True
+        elif l_opt > lo and p_opt < po:                    # lines 15-18
+            if lg < l_opt and pg < po:
+                update = True
+        elif p_opt > po and l_opt < lo:                    # lines 20-22
+            if pg < p_opt and lg < lo:
+                update = True
+        if update:                                         # lines 26-30
+            l_opt, p_opt, chosen = lg, pg, i
+
+    if chosen < 0:
+        return Selection(None, np.inf, np.inf, False, int(cand_idx.shape[0]))
+    satisfied = (l_opt <= lo * (1 + noise_tol)) and (p_opt <= po * (1 + noise_tol))
+    return Selection(
+        cfg_idx=cand_idx[chosen].copy(),
+        latency=l_opt,
+        power=p_opt,
+        satisfied=bool(satisfied),
+        n_candidates=int(cand_idx.shape[0]),
+    )

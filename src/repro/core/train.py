@@ -1,0 +1,184 @@
+"""Algorithm 1 — the proposed GAN training scheme.
+
+For each sample s of a batch:
+    Config_g <- G(Net_s, LO_s, PO_s)                 (line 5)
+    Sat      <- D(Net_s, Config_g, LO_s, PO_s)       (line 6)
+    L_g, P_g <- design model(Net_s, Config_g)        (lines 7-8)
+    Loss_critic += E(Sat, True)/bs                   (line 9)
+    if L_g <= LO_s and P_g <= PO_s:                  (line 10)
+        Loss_config += 0;      Loss_dis += E(Sat, True)/bs
+    else:
+        Loss_config += E(Config_s, Config_g)/bs;  Loss_dis += E(Sat, False)/bs
+    update G with Loss_config + w_critic * Loss_critic
+    update D with Loss_dis
+
+The design model is called through ``jax.pure_callback`` — it is an
+*external, non-differentiable* oracle exactly as in the paper (Fig. 3(c)):
+its output enters the losses only as constants (labels / masks), never in
+the gradient path.  G's gradients flow through D (frozen) for the critic
+term and through the per-group CE for the config term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gan as G
+from repro.core.encoding import binary_log2_encode
+from repro.dataset.generator import Dataset
+from repro.design_models.base import DesignModel
+from repro.optim import adam, apply_updates
+
+
+@dataclasses.dataclass
+class TrainState:
+    g_params: dict
+    d_params: dict
+    g_opt: object
+    d_opt: object
+    rng: jax.Array
+    history: List[Dict[str, float]] = dataclasses.field(default_factory=list)
+
+
+def _design_model_callback(model: DesignModel):
+    """Non-differentiable oracle: (B, n_dims) int indices -> (L, P) float32."""
+
+    def eval_np(cfg_idx, net_idx):
+        lat, pw = model.evaluate_indices(np.asarray(net_idx), np.asarray(cfg_idx))
+        big = np.float32(3.4e38)
+        lat = np.nan_to_num(lat.astype(np.float32), posinf=big)
+        pw = np.nan_to_num(pw.astype(np.float32), posinf=big)
+        return lat, pw
+
+    return eval_np
+
+
+def make_train_step(model: DesignModel, cfg: G.GANConfig):
+    """Build the jitted per-batch update implementing Algorithm 1."""
+    space = model.space
+    oracle = _design_model_callback(model)
+
+    def losses_g(g_params, d_params, batch, noise):
+        probs = G.generator_apply(g_params, space, batch["net_enc"], batch["obj_enc"], noise)
+        # --- external design model on the hard-decoded config (lines 7-8)
+        cfg_idx = G.decode_hard(space, probs)
+        out_spec = (
+            jax.ShapeDtypeStruct((cfg_idx.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((cfg_idx.shape[0],), jnp.float32),
+        )
+        lat_g, pow_g = jax.pure_callback(
+            oracle, out_spec, cfg_idx, batch["net_idx"], vmap_method="sequential"
+        )
+        sat_actual = ((lat_g <= batch["lat_obj"]) & (pow_g <= batch["pow_obj"])).astype(jnp.float32)
+        sat_actual = jax.lax.stop_gradient(sat_actual)
+
+        # D is frozen here (grads are taken w.r.t. g_params only); gradients
+        # flow *through* D into G's probs — that is the critic signal.
+        sat_logits = G.discriminator_apply(d_params, batch["net_enc"], probs, batch["obj_enc"])
+        loss_critic = jnp.mean(G.satisfaction_ce(sat_logits, jnp.ones_like(sat_actual)))
+        ce_cfg = G.grouped_cross_entropy(space, batch["cfg_onehot"], probs)
+        loss_config = jnp.mean((1.0 - sat_actual) * ce_cfg)       # masked (line 11/14)
+        loss_g = loss_config + cfg.w_critic * loss_critic
+        aux = dict(loss_config=loss_config, loss_critic=loss_critic,
+                   probs=probs, sat_actual=sat_actual,
+                   sat_rate=jnp.mean(sat_actual))
+        return loss_g, aux
+
+    def losses_d(d_params, batch, probs, sat_actual):
+        probs = jax.lax.stop_gradient(probs)
+        sat_logits = G.discriminator_apply(d_params, batch["net_enc"], probs, batch["obj_enc"])
+        loss_dis = jnp.mean(G.satisfaction_ce(sat_logits, sat_actual))  # lines 12/15
+        d_acc = jnp.mean(
+            (jnp.argmax(sat_logits, -1).astype(jnp.float32) == sat_actual).astype(jnp.float32)
+        )
+        return loss_dis, dict(d_acc=d_acc)
+
+    g_optim = adam(cfg.g_lr)
+    d_optim = adam(cfg.d_lr)
+
+    @jax.jit
+    def step(g_params, d_params, g_opt, d_opt, batch, rng):
+        rng, nrng = jax.random.split(rng)
+        noise = G.sample_noise(nrng, batch["net_enc"].shape[0], cfg)
+        (loss_g, aux), g_grads = jax.value_and_grad(losses_g, has_aux=True)(
+            g_params, d_params, batch, noise
+        )
+        g_upd, g_opt = g_optim.update(g_grads, g_opt)
+        g_params = apply_updates(g_params, g_upd)
+
+        (loss_d, daux), d_grads = jax.value_and_grad(losses_d, has_aux=True)(
+            d_params, batch, aux["probs"], aux["sat_actual"]
+        )
+        d_upd, d_opt = d_optim.update(d_grads, d_opt)
+        d_params = apply_updates(d_params, d_upd)
+
+        metrics = dict(
+            loss_g=loss_g, loss_d=loss_d,
+            loss_config=aux["loss_config"], loss_critic=aux["loss_critic"],
+            sat_rate=aux["sat_rate"], d_acc=daux["d_acc"],
+        )
+        return g_params, d_params, g_opt, d_opt, rng, metrics
+
+    return g_optim, d_optim, step
+
+
+def encode_batch(model: DesignModel, ds: Dataset, idx: np.ndarray) -> Dict[str, np.ndarray]:
+    net_idx = ds.net_idx[idx]
+    return {
+        "net_idx": net_idx.astype(np.int32),
+        "net_enc": ds.net_encoded(model, net_idx),
+        "cfg_onehot": model.space.onehot_from_indices(ds.cfg_idx[idx]),
+        # sample objectives: the sample's own (L, P) are the objectives it
+        # satisfies exactly (dataset rows double as (objective, witness)).
+        "obj_enc": ds.obj_encoded(ds.latency[idx], ds.power[idx]),
+        "lat_obj": ds.latency[idx].astype(np.float32),
+        "pow_obj": ds.power[idx].astype(np.float32),
+    }
+
+
+def train_gan(
+    model: DesignModel,
+    ds: Dataset,
+    cfg: G.GANConfig,
+    iters: int = 5,
+    seed: int = 0,
+    log_every: int = 0,
+) -> TrainState:
+    """Mini-batch alternating training (Algorithm 1, lines 1-21)."""
+    rng = jax.random.PRNGKey(seed)
+    rng, g_rng, d_rng = jax.random.split(rng, 3)
+    g_params = G.init_generator(g_rng, cfg, model.space)
+    d_params = G.init_discriminator(d_rng, cfg, model.space)
+    g_optim, d_optim, step = make_train_step(model, cfg)
+    g_opt = g_optim.init(g_params)
+    d_opt = d_optim.init(d_params)
+
+    state = TrainState(g_params, d_params, g_opt, d_opt, rng)
+    np_rng = np.random.default_rng(seed)
+    n = ds.n
+    bs = min(cfg.batch_size, n)
+    t0 = time.time()
+    for it in range(iters):
+        perm = np_rng.permutation(n)
+        for b0 in range(0, n - bs + 1, bs):
+            batch = encode_batch(model, ds, perm[b0 : b0 + bs])
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            (state.g_params, state.d_params, state.g_opt, state.d_opt,
+             state.rng, metrics) = step(
+                state.g_params, state.d_params, state.g_opt, state.d_opt,
+                batch, state.rng)
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["iter"] = it
+            state.history.append(rec)
+        if log_every and (it % log_every == 0):
+            m = state.history[-1]
+            print(f"[train_gan] iter={it} loss_g={m['loss_g']:.4f} "
+                  f"loss_d={m['loss_d']:.4f} critic={m['loss_critic']:.4f} "
+                  f"sat={m['sat_rate']:.3f} t={time.time()-t0:.1f}s")
+    return state

@@ -1,0 +1,1 @@
+from repro.dataset.generator import Dataset, DSETask, generate_dataset, generate_tasks  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.design_models.base import DesignModel  # noqa: F401
+from repro.design_models.im2col import Im2colModel  # noqa: F401
+from repro.design_models.dnnweaver import DnnWeaverModel  # noqa: F401

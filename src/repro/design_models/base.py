@@ -1,0 +1,53 @@
+"""Design-model interface (paper §2.1, §5.1).
+
+A design model maps (network parameters, configurations) -> objective
+metrics (latency, power).  Implementations must be vectorized over a
+leading batch axis and be pure-numpy/jnp so they can score thousands of
+candidate configuration sets at once (Algorithm 2 scan).
+"""
+from __future__ import annotations
+
+import abc
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.encoding import ConfigDim, ConfigSpace
+
+
+class DesignModel(abc.ABC):
+    """Analytic model of the metrics in the objectives."""
+
+    name: str = "base"
+
+    #: the configuration design space (one-hot groups)
+    space: ConfigSpace
+    #: the network-parameter space (dims sampled for the dataset)
+    net_space: ConfigSpace
+
+    @abc.abstractmethod
+    def evaluate(self, net: np.ndarray, config: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, n_net_dims) values, (B, n_cfg_dims) values -> (latency, power).
+
+        Latency in cycles, power in watts; both (B,).  Infeasible configs
+        (e.g. tile does not fit SRAM) return latency = +inf.
+        """
+
+    # convenience -----------------------------------------------------------
+    def evaluate_indices(self, net_idx, cfg_idx):
+        net = self.net_space.values_from_indices(net_idx)
+        cfg = self.space.values_from_indices(cfg_idx)
+        return self.evaluate(net, cfg)
+
+
+def pow2_choices(lo: int, hi: int) -> Tuple[float, ...]:
+    out = []
+    v = lo
+    while v <= hi:
+        out.append(float(v))
+        v *= 2
+    return tuple(out)
+
+
+def make_dim(name: str, choices) -> ConfigDim:
+    return ConfigDim(name=name, choices=tuple(float(c) for c in choices))

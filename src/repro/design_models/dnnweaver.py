@@ -1,0 +1,89 @@
+"""The DnnWeaver design model (paper §7.1.1).
+
+Systolic-array template in the style of the open-source DnnWeaver v2 code.
+Low-dimension design space (Table 1: configurations without '*'): PE number
+and the three SRAM sizes.  The mapping (tiling) is derived internally by
+the template's own greedy schedule — the user does not control it — and the
+DRAM bandwidths are fixed board properties.  The model reuses the same
+pipelined roofline core as the im2col model with internally-chosen tiles,
+standing in for the paper's "calibrated by simulation and synthesis".
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.encoding import ConfigSpace
+from repro.design_models.base import DesignModel, make_dim, pow2_choices
+from repro.design_models.im2col import make_net_space, roofline_latency_power
+
+FIXED_DSB = 64.0   # DRAM->SRAM words/cycle (board property)
+FIXED_SDB = 32.0   # SRAM->DRAM words/cycle
+
+
+def make_dnnweaver_space() -> ConfigSpace:
+    return ConfigSpace(
+        dims=(
+            make_dim("PEN", pow2_choices(4, 512)),
+            make_dim("ISS", pow2_choices(128, 8192)),
+            make_dim("WSS", pow2_choices(128, 8192)),
+            make_dim("OSS", pow2_choices(128, 8192)),
+        )
+    )
+
+
+def _greedy_tile(cap: np.ndarray, *factors: np.ndarray) -> np.ndarray:
+    """Largest power-of-two scale s.t. prod(factors) * scale <= cap."""
+    prod = np.ones_like(cap)
+    for f in factors:
+        prod = prod * f
+    scale = np.maximum(cap / np.maximum(prod, 1.0), 1e-9)
+    return np.power(2.0, np.floor(np.log2(np.maximum(scale, 1.0))))
+
+
+class DnnWeaverModel(DesignModel):
+    """Low-dimension design space (4 config dims, |space| = 8*7^3 = 2744)."""
+
+    name = "dnnweaver"
+
+    def __init__(self) -> None:
+        self.space = make_dnnweaver_space()
+        self.net_space = make_net_space()
+
+    def _derive_tiles(self, net: np.ndarray, iss, wss, oss):
+        ic, oc, ow, oh, kw, kh = (net[..., i].astype(np.float64) for i in range(6))
+        # template schedule: keep full kernel window; tile channels to fit
+        # the weight SRAM, tile the output plane to fit the output SRAM.
+        tkw, tkh = kw, kh
+
+        def pow2floor(x):
+            return np.power(2.0, np.floor(np.log2(np.maximum(x, 1.0))))
+
+        tic = np.maximum(pow2floor(np.minimum(ic, wss / np.maximum(kw * kh, 1.0))), 1.0)
+        toc = np.maximum(pow2floor(np.minimum(
+            np.minimum(oc, oss),
+            wss / np.maximum(tic * kw * kh, 1.0))), 1.0)
+        # output tile: square-ish plane tile fitting OSS alongside toc
+        plane_cap = np.maximum(oss / np.maximum(toc, 1.0), 1.0)
+        tow = np.maximum(np.minimum(pow2floor(np.sqrt(plane_cap)), ow), 1.0)
+        toh = np.maximum(np.minimum(pow2floor(plane_cap / tow), oh), 1.0)
+        # input SRAM bounds the im2col patch tile: shrink (toh, tow, tic)
+        # in turn (power-of-two halvings) until the patch fits.
+        tiles = [toh, tow, tic]
+        for j in range(3):
+            patch = tiles[2] * tkw * tkh * tiles[1] * tiles[0]
+            excess = np.power(2.0, np.ceil(np.log2(
+                np.maximum(patch / np.maximum(iss, 1.0), 1.0))))
+            f = np.minimum(tiles[j], excess)
+            tiles[j] = np.maximum(tiles[j] / f, 1.0)
+        toh, tow, tic = tiles
+        return tic, toc, tow, toh, tkw, tkh
+
+    def evaluate(self, net: np.ndarray, config: np.ndarray):
+        net = np.asarray(net, np.float64)
+        c = np.asarray(config, np.float64)
+        pen, iss, wss, oss = (c[..., i] for i in range(4))
+        tic, toc, tow, toh, tkw, tkh = self._derive_tiles(net, iss, wss, oss)
+        return roofline_latency_power(
+            net, pen, FIXED_DSB, FIXED_SDB, iss, wss, oss,
+            tic, toc, tow, toh, tkw, tkh,
+        )

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+- fused_mlp: dense+bias+ReLU epilogue fusion (GANDSE G/D MLP layers)
+- flash_attention: GQA/causal/sliding-window flash attention (LM layers)
+
+Each kernel ships with ``ref.py`` (pure-jnp oracle) and is validated in
+interpret mode on CPU; ``ops.py`` holds the dispatching jit wrappers.
+"""
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused dense + bias + ReLU (the GAN's MLP hot-spot).
+
+The GANDSE G/D networks are deep ReLU MLPs (11-14 layers x 2048); on TPU
+the hot loop is `y = relu(x @ w + b)` repeated per layer.  Fusing bias+ReLU
+into the matmul epilogue removes one HBM round-trip of the (M, N)
+activation per layer — the layer becomes purely MXU-bound.
+
+Tiling: grid (M/bm, N/bn, K/bk); the K axis is the innermost (sequential)
+grid dimension, accumulating into a VMEM f32 scratch tile.  On the last K
+step the bias is added, ReLU applied, and the tile written out once.
+VMEM working set = bm*bk + bk*bn + bm*bn (+ bn bias) floats; the default
+(256, 512, 512) tiles use ~1.6 MB — far below the ~16 MB/core budget and
+MXU-aligned (every dim a multiple of 128).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 256
+DEFAULT_BK = 512
+DEFAULT_BN = 512
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int, relu: bool):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_step == n_k - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _pick(block: int, dim: int) -> int:
+    """Largest divisor of `dim` that is <= block (prefers the block itself)."""
+    if dim % block == 0:
+        return block
+    b = block
+    while b > 1 and dim % b:
+        b //= 2
+    return b if dim % b == 0 else dim
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bk", "bn", "interpret"))
+def fused_dense(
+    x: jnp.ndarray,                 # (M, K)
+    w: jnp.ndarray,                 # (K, N)
+    b: jnp.ndarray,                 # (N,)
+    *,
+    relu: bool = True,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bk, bn = _pick(bm, m), _pick(bk, k), _pick(bn, n)
+    n_k = k // bk
+
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_fused_dense_kernel, n_k=n_k, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b)

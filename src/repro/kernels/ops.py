@@ -1,0 +1,55 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On TPU the Pallas path is used; elsewhere (this CPU container) the pure-XLA
+fallback keeps semantics identical, and ``interpret=True`` forces the
+Pallas kernel body to execute in Python for validation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_mlp as _fm
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_dense_relu(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                     *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """relu(x @ w + b); x may have leading batch dims (flattened to M)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if interpret or (interpret is None and _on_tpu()):
+        y = _fm.fused_dense(x2, w, b, relu=True, interpret=bool(interpret))
+    else:
+        y = _ref.fused_dense_relu(x2, w, b)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def fused_dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if interpret or (interpret is None and _on_tpu()):
+        y = _fm.fused_dense(x2, w, b, relu=False, interpret=bool(interpret))
+    else:
+        y = _ref.fused_dense(x2, w, b)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(B, H, S, D) x (B, Hkv, S, D)^2 -> (B, H, S, D)."""
+    if interpret or (interpret is None and _on_tpu()):
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, interpret=bool(interpret))
+    return _ref.flash_attention(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset)

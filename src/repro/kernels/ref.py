@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical definition of the kernel with no tiling
+or hardware concerns; tests assert_allclose(kernel(interpret=True), ref).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def fused_dense_relu(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """relu(x @ w + b) in f32 accumulation."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return jnp.maximum(y, 0.0).astype(x.dtype)
+
+
+def fused_dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x @ w + b in f32 accumulation (no activation, output head)."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,            # (B, H, Sq, D)
+    k: jnp.ndarray,            # (B, Hkv, Sk, D)
+    v: jnp.ndarray,            # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Unblocked GQA attention; softmax in f32. Returns (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    scores = jnp.einsum(
+        "bkgqd,bksd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(d))
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def moe_dispatch_ffn(
+    x: jnp.ndarray,            # (T, Dm) tokens
+    w_gate: jnp.ndarray,       # (E, Dm, Dff)  (SwiGLU gate proj)
+    w_up: jnp.ndarray,         # (E, Dm, Dff)
+    w_down: jnp.ndarray,       # (E, Dff, Dm)
+    expert_idx: jnp.ndarray,   # (T, K) int
+    expert_w: jnp.ndarray,     # (T, K) float routing weights
+) -> jnp.ndarray:
+    """Dense-gather MoE oracle: every token runs through its K experts."""
+    t, dm = x.shape
+    kk = expert_idx.shape[1]
+    xf = x.astype(jnp.float32)
+
+    def one(tok, eidx, ew):
+        def per_k(e):
+            g = jax.nn.silu(tok @ w_gate[e].astype(jnp.float32))
+            u = tok @ w_up[e].astype(jnp.float32)
+            return (g * u) @ w_down[e].astype(jnp.float32)
+
+        outs = jax.vmap(per_k)(eidx)           # (K, Dm)
+        return jnp.sum(outs * ew[:, None], axis=0)
+
+    out = jax.vmap(one)(xf, expert_idx, expert_w.astype(jnp.float32))
+    return out.astype(x.dtype)

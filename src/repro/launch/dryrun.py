@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory / cost / collective analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      [--arch mixtral-8x7b ...] [--shape train_4k ...] \
+      [--mesh single|multi|both] [--out results/dryrun.jsonl]
+
+Success criterion: ``jax.jit(step).lower(**input_specs).compile()``
+succeeds for the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh for
+every applicable cell.  The compiled artifacts also feed §Roofline.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import base as MB
+from repro.train import step as TS
+from repro.utils import roofline as RL
+
+
+def active_param_fraction_flops(m, p_struct) -> float:
+    """Active (per-token) params: MoE expert tensors count top_k/E."""
+    import jax.tree_util as jtu
+    total = 0.0
+    for path, leaf in jtu.tree_leaves_with_path(p_struct):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        n = float(np.prod(leaf.shape))
+        if name in ("w_gate", "w_up", "w_down") and len(leaf.shape) >= 3:
+            e = leaf.shape[-3]
+            # find top_k from the arch (uniform across segments)
+            top_k = 2
+            for seg in m.segments:
+                for spec in seg.pattern:
+                    if spec.cfg.n_experts:
+                        top_k = spec.cfg.top_k
+            n *= top_k / e
+        total += n
+    # embedding lookup is not a matmul; subtract the embed table once
+    embed = float(np.prod(p_struct["embed"]["table"].shape))
+    return max(total - embed, 1.0)
+
+
+def model_flops_for(m, shape, p_struct) -> float:
+    n_active = active_param_fraction_flops(m, p_struct)
+    if m.enc_segments is not None:
+        # enc-dec: encoder params see seq_len frames, decoder params see
+        # the decoder context
+        n_enc = float(sum(np.prod(l.shape) for l in
+                          jax.tree_util.tree_leaves(p_struct["encoder"])))
+        n_dec = max(n_active - n_enc, 1.0)
+        dec_toks = shape.global_batch * min(TS.WHISPER_DEC_LEN, shape.seq_len)
+        enc_toks = shape.global_batch * shape.seq_len
+        if shape.kind == "train":
+            return (RL.model_flops_train(n_enc, enc_toks)
+                    + RL.model_flops_train(n_dec, dec_toks))
+        if shape.kind == "prefill":
+            return (RL.model_flops_forward(n_enc, enc_toks)
+                    + RL.model_flops_forward(n_dec, dec_toks))
+        return RL.model_flops_forward(n_dec, shape.global_batch)
+    if shape.kind == "train":
+        return RL.model_flops_train(n_active, shape.global_batch * shape.seq_len)
+    if shape.kind == "prefill":
+        return RL.model_flops_forward(n_active, shape.global_batch * shape.seq_len)
+    return RL.model_flops_forward(n_active, shape.global_batch)  # decode: 1 tok
+
+
+# grad-accumulation defaults for the train_4k cells: chosen so the
+# activation working set fits 16 GB/chip HBM (see EXPERIMENTS.md §Dry-run)
+TRAIN_MICROBATCHES = {
+    "mixtral-8x7b": 8, "phi3.5-moe-42b-a6.6b": 8, "deepseek-coder-33b": 4,
+    "qwen3-14b": 2, "qwen2-vl-7b": 2, "gemma3-1b": 2,
+    "xlstm-1.3b": 4, "hymba-1.5b": 8, "stablelm-1.6b": 1,
+}
+
+
+def run_cell(arch_name: str, shape_name: str, mesh, mesh_name: str,
+             verbose: bool = True, microbatches: int = 0) -> dict:
+    m = configs.get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+           "chips": int(np.prod(list(mesh.shape.values())))}
+    if not applicable(m, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = m.notes
+        return rec
+    if not microbatches:
+        microbatches = (TRAIN_MICROBATCHES.get(m.name, 1)
+                        if shape.kind == "train" else 1)
+    rec["microbatches"] = microbatches
+    t0 = time.time()
+    try:
+        case = TS.build_case(m, shape, mesh, microbatches=microbatches)
+        jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                         donate_argnums=case.donate_argnums)
+        with mesh:
+            lowered = jitted.lower(*case.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text()
+        chips = rec["chips"]
+        rl = RL.from_compiled(case.name, compiled, hlo, chips,
+                              model_flops=model_flops_for(m, shape,
+                                                          case.args[0]))
+        rec.update(
+            status="ok",
+            t_lower_s=round(t_lower, 1),
+            t_compile_s=round(t_compile, 1),
+            bytes_per_device=int(getattr(mem, "temp_size_in_bytes", 0)
+                                 + getattr(mem, "argument_size_in_bytes", 0)
+                                 + getattr(mem, "output_size_in_bytes", 0)
+                                 - getattr(mem, "alias_size_in_bytes", 0)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+            arg_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            flops=rl.flops, hbm_bytes=rl.hbm_bytes, coll_bytes=rl.coll_bytes,
+            model_flops=rl.model_flops,
+            **{k: v for k, v in rl.row().items() if k != "case"},
+        )
+        from repro.utils.hlo_cost import analyze
+        t = analyze(hlo)
+        rec["collectives"] = {k: v for k, v in t.items() if k.startswith("coll")}
+        # raw XLA numbers for reference (loop bodies counted once)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["xla_raw_flops"] = float(ca.get("flops", 0.0))
+        rec["xla_raw_bytes"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        if verbose:
+            traceback.print_exc()
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=configs.list_archs())
+    ap.add_argument("--shape", nargs="*", default=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--micro", type=int, default=0,
+                    help="override grad-accum microbatches (train cells)")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_fail = 0
+    with open(args.out, "a") as f:
+        for arch in args.arch:
+            for shape in args.shape:
+                for mesh_name, mesh in meshes:
+                    rec = run_cell(arch, shape, mesh, mesh_name,
+                                   microbatches=args.micro)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    status = rec["status"]
+                    n_fail += status == "fail"
+                    extra = (f" bottleneck={rec.get('bottleneck')}"
+                             f" t_bound={max(rec.get('t_compute_s', 0) or 0, rec.get('t_memory_s', 0) or 0, rec.get('t_collective_s', 0) or 0):.4f}s"
+                             if status == "ok" else rec.get("error", rec.get("reason", "")))
+                    print(f"[dryrun] {arch:22s} {shape:12s} {mesh_name:18s} "
+                          f"{status:7s}{extra}", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

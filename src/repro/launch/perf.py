@@ -1,0 +1,117 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimb driver: sweep the optimization knobs for one
+(arch x shape) cell, re-lower + re-analyse, and log
+hypothesis -> change -> before/after rows.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch deepseek-coder-33b \
+      --shape train_4k [--mesh single] --sweep micro=1,2,4,8 fsdp=0,1 \
+      act=model,seq,none remat=0,1 --out results/perf_<arch>.jsonl
+"""
+import argparse
+import itertools
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import model_flops_for
+from repro.train import step as TS
+from repro.utils import roofline as RL
+
+
+def run_variant(m, shape, mesh, chips, *, micro, fsdp, act, remat) -> dict:
+    rec = dict(micro=micro, fsdp=fsdp, act=act, remat=remat)
+    t0 = time.time()
+    try:
+        case = TS.build_case(m, shape, mesh, microbatches=micro,
+                             fsdp=bool(fsdp), act_shard=act,
+                             remat=bool(remat))
+        with mesh:
+            compiled = jax.jit(case.fn, in_shardings=case.in_shardings,
+                               donate_argnums=case.donate_argnums
+                               ).lower(*case.args).compile()
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text()
+        rl = RL.from_compiled(case.name, compiled, hlo, chips,
+                              model_flops=model_flops_for(m, shape,
+                                                          case.args[0]))
+        rec.update(
+            status="ok",
+            bytes_per_device=int(mem.temp_size_in_bytes
+                                 + mem.argument_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 - mem.alias_size_in_bytes),
+            t_compute_s=rl.t_compute, t_memory_s=rl.t_memory,
+            t_collective_s=rl.t_collective, t_bound=rl.t_bound,
+            bottleneck=rl.bottleneck, mfu_bound=rl.mfu_bound,
+            coll_bytes=rl.coll_bytes, flops=rl.flops, hbm_bytes=rl.hbm_bytes,
+            compile_s=round(time.time() - t0, 1),
+        )
+    except Exception as e:
+        rec.update(status="fail", error=f"{type(e).__name__}: {str(e)[:300]}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="elastic single-pod mesh, e.g. 32x8 (data x model)")
+    ap.add_argument("--micro", default="1")
+    ap.add_argument("--fsdp", default="1")
+    ap.add_argument("--act", default="model")
+    ap.add_argument("--remat", default="1")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.mesh_shape:
+        from repro.launch.mesh import make_mesh
+        d, mm = (int(x) for x in args.mesh_shape.split("x"))
+        mesh = make_mesh((d, mm), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    chips = int(np.prod(list(mesh.shape.values())))
+    m = configs.get_arch(args.arch)
+    shape = SHAPES[args.shape]
+    out = args.out or f"results/perf_{configs.canonical(args.arch)}_{args.shape}.jsonl"
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+
+    grid = itertools.product(
+        [int(x) for x in args.micro.split(",")],
+        [int(x) for x in args.fsdp.split(",")],
+        args.act.split(","),
+        [int(x) for x in args.remat.split(",")],
+    )
+    with open(out, "a") as f:
+        for micro, fsdp, act, remat in grid:
+            rec = run_variant(m, shape, mesh, chips, micro=micro, fsdp=fsdp,
+                              act=act, remat=remat)
+            rec.update(arch=args.arch, shape=args.shape, mesh=args.mesh)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            if rec["status"] == "ok":
+                print(f"[perf] micro={micro} fsdp={fsdp} act={act} "
+                      f"remat={remat}: t_bound={rec['t_bound']:.4f}s "
+                      f"({rec['bottleneck']}) mfu<={rec['mfu_bound']:.3f} "
+                      f"mem={rec['bytes_per_device']/1e9:.1f}GB "
+                      f"coll={rec['coll_bytes']/1e9:.2f}GB", flush=True)
+            else:
+                print(f"[perf] micro={micro} fsdp={fsdp} act={act} "
+                      f"remat={remat}: FAIL {rec['error']}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+from repro.models import base, builders  # noqa: F401

@@ -1,0 +1,307 @@
+"""Unified model builder: every assigned architecture is a stack of
+*segments*, each segment a ``lax.scan`` over `repeats` copies of a short
+periodic *layer pattern* (list of LayerSpecs).
+
+  * uniform archs (qwen3, mixtral, ...): one segment, pattern length 1
+  * gemma3 (5 local : 1 global): pattern [local x5, global], repeats 4,
+    plus a tail segment of 2 local layers
+  * xlstm (mLSTM:sLSTM 7:1): pattern [mlstm x7, slstm], repeats 6
+  * hymba: pattern length 1 with a parallel SSM branch in the block
+
+Scanning over repeats keeps the HLO size (and 512-device compile time)
+flat in depth; the periodic pattern is unrolled inside the scan body so
+heterogeneous layers still share one loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import blocks as B
+from repro.nn import layers as L
+from repro.nn import xlstm as X
+from repro.nn import ssm as S
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """kind: dense | mlstm | slstm (cfg.n_experts / ssm_state select MoE /
+    hymba inside the dense block)."""
+
+    kind: str
+    cfg: B.BlockCfg
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    repeats: int
+    pattern: Tuple[LayerSpec, ...]
+
+    @property
+    def n_layers(self) -> int:
+        return self.repeats * len(self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    family: str                        # dense | moe | vlm | audio | ssm | hybrid
+    d_model: int
+    vocab: int
+    segments: Tuple[Segment, ...]
+    tied_embeddings: bool = True
+    # enc-dec (whisper): encoder segments; None for decoder-only models
+    enc_segments: Optional[Tuple[Segment, ...]] = None
+    enc_positions: str = "learned"     # whisper uses learned/sinusoidal abs pos
+    max_enc_len: int = 1500
+    sub_quadratic: bool = False        # eligible for long_500k
+    notes: str = ""
+
+    @property
+    def n_layers(self) -> int:
+        return sum(s.n_layers for s in self.segments)
+
+
+# ---------------------------------------------------------------------------
+# per-spec init/apply/decode dispatch
+# ---------------------------------------------------------------------------
+def spec_init(rng, spec: LayerSpec, dtype=jnp.float32):
+    if spec.kind == "dense":
+        return B.block_init(rng, spec.cfg, dtype)
+    if spec.kind == "mlstm":
+        return X.mlstm_init(rng, spec.cfg.d_model, spec.cfg.n_heads, dtype)
+    if spec.kind == "slstm":
+        return X.slstm_init(rng, spec.cfg.d_model, spec.cfg.n_heads, dtype)
+    if spec.kind == "enc":
+        return B.enc_block_init(rng, spec.cfg, dtype)
+    if spec.kind == "dec":
+        return B.dec_block_init(rng, spec.cfg, dtype)
+    raise ValueError(spec.kind)
+
+
+def spec_apply(params, x, spec: LayerSpec, positions, enc_out=None):
+    if spec.kind == "dense":
+        return B.block_apply(params, x, spec.cfg, positions)
+    if spec.kind == "mlstm":
+        y, _ = X.mlstm_apply(params, x, spec.cfg.n_heads)
+        return x + y
+    if spec.kind == "slstm":
+        y, _ = X.slstm_apply(params, x, spec.cfg.n_heads)
+        return x + y
+    if spec.kind == "enc":
+        return B.enc_block_apply(params, x, spec.cfg, positions)
+    if spec.kind == "dec":
+        return B.dec_block_apply(params, x, enc_out, spec.cfg, positions)
+    raise ValueError(spec.kind)
+
+
+def spec_state_init(spec: LayerSpec, batch: int, cache_len: int,
+                    dtype=jnp.float32) -> Any:
+    """Decode-state pytree for one layer (KV cache / recurrent state)."""
+    cfg = spec.cfg
+    if spec.kind in ("dense", "dec"):
+        span = cache_len if cfg.window is None else min(cfg.window, cache_len)
+        kv = (jnp.zeros((batch, span, cfg.n_kv, cfg.dh), dtype),
+              jnp.zeros((batch, span, cfg.n_kv, cfg.dh), dtype))
+        st = {"kv": kv, "len": jnp.zeros((), jnp.int32)}
+        if cfg.ssm_state:
+            st["ssm"] = None  # filled by model init (needs params' shapes)
+        return st
+    if spec.kind == "mlstm":
+        dh = cfg.d_model // cfg.n_heads
+        return (jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+                jnp.zeros((batch, cfg.n_heads, dh), jnp.float32),
+                jnp.full((batch, cfg.n_heads), -1e30, jnp.float32))
+    if spec.kind == "slstm":
+        d = cfg.d_model
+        z = jnp.zeros((batch, d), jnp.float32)
+        return (z, z + 1e-6, jnp.full((batch, d), -1e30, jnp.float32), z)
+    raise ValueError(spec.kind)
+
+
+def spec_decode(params, x1, spec: LayerSpec, pos, state, enc_out=None):
+    cfg = spec.cfg
+    if spec.kind == "dense":
+        ring = cfg.window is not None
+        return B.block_decode(params, x1, cfg, pos, state, ring=ring)
+    if spec.kind == "dec":
+        return B.dec_block_decode(params, x1, enc_out, cfg, pos, state)
+    if spec.kind == "mlstm":
+        y, st = X.mlstm_apply(params, x1, cfg.n_heads, state=state)
+        return x1 + y, st
+    if spec.kind == "slstm":
+        y, st = X.slstm_apply(params, x1, cfg.n_heads, state=state)
+        return x1 + y, st
+    raise ValueError(spec.kind)
+
+
+# ---------------------------------------------------------------------------
+# whole-model init / forward / decode
+# ---------------------------------------------------------------------------
+def _stack(trees: Sequence[Any]):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _segment_init(rng, seg: Segment, dtype):
+    """Per-spec stacked params: list over pattern of (repeats, ...) stacks."""
+    out = []
+    for si, spec in enumerate(seg.pattern):
+        reps = [
+            spec_init(jax.random.fold_in(rng, si * 10007 + r), spec, dtype)
+            for r in range(seg.repeats)
+        ]
+        out.append(_stack(reps))
+    return out
+
+
+def init_params(rng, m: ModelCfg, dtype=jnp.float32) -> Dict[str, Any]:
+    r_embed, r_body, r_head, r_enc = jax.random.split(rng, 4)
+    p: Dict[str, Any] = {
+        "embed": L.embed_init(r_embed, m.vocab, m.d_model, dtype),
+        "segments": [
+            _segment_init(jax.random.fold_in(r_body, i), seg, dtype)
+            for i, seg in enumerate(m.segments)
+        ],
+        "ln_f": L.rmsnorm_init(m.d_model, dtype),
+    }
+    if not m.tied_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(r_head, (m.d_model, m.vocab), jnp.float32)
+            * (1.0 / m.d_model) ** 0.5
+        ).astype(dtype)
+    if m.enc_segments is not None:
+        p["encoder"] = {
+            "segments": [
+                _segment_init(jax.random.fold_in(r_enc, i), seg, dtype)
+                for i, seg in enumerate(m.enc_segments)
+            ],
+            "pos_embed": (jax.random.normal(
+                jax.random.fold_in(r_enc, 999), (m.max_enc_len, m.d_model),
+                jnp.float32) * 0.02).astype(dtype),
+            "ln_f": L.layernorm_init(m.d_model, dtype),
+        }
+    return p
+
+
+def _run_segments(segments_params, segs: Tuple[Segment, ...], x, positions,
+                  enc_out=None, remat: bool = False):
+    from repro.train import shardings as SH
+
+    def _constrain(xc):
+        mesh = SH.current_mesh()
+        if mesh is None:
+            return xc
+        return SH.constrain(
+            xc, SH.activation_spec(mesh, xc.shape[0], xc.shape[-1],
+                                   seq=xc.shape[1]))
+
+    for seg_p, seg in zip(segments_params, segs):
+        def body(xc, layer_params, _seg=seg):
+            for spec, sp in zip(_seg.pattern, layer_params):
+                xc = spec_apply(sp, xc, spec, positions, enc_out=enc_out)
+            return _constrain(xc), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        if seg.repeats == 1:
+            x, _ = body(x, [jax.tree.map(lambda a: a[0], sp) for sp in seg_p])
+        else:
+            x, _ = jax.lax.scan(body, x, seg_p)
+    return x
+
+
+def encode(params, m: ModelCfg, frames: jnp.ndarray, remat: bool = False):
+    """Whisper encoder over precomputed (stub) frame embeddings
+    (B, S_enc, D)."""
+    enc = params["encoder"]
+    se = frames.shape[1]
+    pos_tab = enc["pos_embed"]
+    if se > pos_tab.shape[0]:          # extend cyclically for oversize stubs
+        reps = -(-se // pos_tab.shape[0])
+        pos_tab = jnp.tile(pos_tab, (reps, 1))
+    x = frames + pos_tab[None, :se]
+    positions = jnp.broadcast_to(jnp.arange(se)[None], frames.shape[:2])
+    x = _run_segments(enc["segments"], m.enc_segments, x, positions, remat=remat)
+    return L.layernorm_apply(enc["ln_f"], x)
+
+
+def forward(params, m: ModelCfg, tokens: jnp.ndarray,
+            positions: Optional[jnp.ndarray] = None,
+            enc_out: Optional[jnp.ndarray] = None,
+            remat: bool = False) -> jnp.ndarray:
+    """tokens (B, S) -> logits (B, S, V).  positions defaults to arange;
+    pass (3, B, S) for M-RoPE archs."""
+    x = L.embed_apply(params["embed"], tokens)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None], tokens.shape)
+    x = _run_segments(params["segments"], m.segments, x, positions,
+                      enc_out=enc_out, remat=remat)
+    x = L.rmsnorm_apply(params["ln_f"], x)
+    if m.tied_embeddings:
+        return L.embed_logits(params["embed"], x)
+    return x @ params["lm_head"]
+
+
+def init_decode_state(params, m: ModelCfg, batch: int, cache_len: int,
+                      dtype=jnp.float32):
+    """Stacked per-segment decode states mirroring the param stacks."""
+    states = []
+    for seg in m.segments:
+        seg_states = []
+        for spec in seg.pattern:
+            st = spec_state_init(spec, batch, cache_len, dtype)
+            if isinstance(st, dict) and "ssm" in st and st["ssm"] is None:
+                st["ssm"] = S.ssm_decode_init(
+                    _ssm_params_proto(params, m, spec), batch)
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (seg.repeats,) + a.shape), st)
+            seg_states.append(stacked)
+        states.append(seg_states)
+    return states
+
+
+def _ssm_params_proto(params, m: ModelCfg, spec: LayerSpec):
+    """Find one layer's ssm params to size the decode state."""
+    for seg_p, seg in zip(params["segments"], m.segments):
+        for sp, s in zip(seg_p, seg.pattern):
+            if s.kind == "dense" and s.cfg.ssm_state:
+                return jax.tree.map(lambda a: a[0], sp["ssm"])
+    raise ValueError("no ssm layer")
+
+
+def decode_step(params, m: ModelCfg, token: jnp.ndarray, pos: jnp.ndarray,
+                states, enc_out: Optional[jnp.ndarray] = None):
+    """One-token decode.  token (B, 1) int32; pos scalar int32 (absolute
+    position).  Returns (logits (B, 1, V), new states)."""
+    x = L.embed_apply(params["embed"], token)
+    pos_b = jnp.broadcast_to(jnp.reshape(pos, (1, 1)), (token.shape[0], 1))
+    new_states = []
+    for seg_p, seg, seg_st in zip(params["segments"], m.segments, states):
+        def body(xc, per_layer, _seg=seg):
+            layer_params, layer_state = per_layer
+            new_layer_state = []
+            for spec, sp, st in zip(_seg.pattern, layer_params, layer_state):
+                xc, st = spec_decode(sp, xc, spec, pos_b, st, enc_out=enc_out)
+                new_layer_state.append(st)
+            return xc, new_layer_state
+
+        if seg.repeats == 1:
+            take0 = lambda tree: jax.tree.map(lambda a: a[0], tree)
+            x, st = body(x, (list(map(take0, seg_p)), list(map(take0, seg_st))))
+            new_states.append([jax.tree.map(lambda a: a[None], s) for s in st])
+        else:
+            x, st = jax.lax.scan(body, x, (seg_p, seg_st))
+            new_states.append(st)
+    x = L.rmsnorm_apply(params["ln_f"], x)
+    logits = (L.embed_logits(params["embed"], x) if m.tied_embeddings
+              else x @ params["lm_head"])
+    return logits, new_states
+
+
+def param_count(params) -> int:
+    import numpy as np
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))

@@ -1,0 +1,1 @@
+from repro.nn import layers  # noqa: F401

@@ -1,0 +1,287 @@
+"""Attention: GQA, sliding-window, blocked (flash-style) XLA implementation.
+
+Three execution paths:
+  * ``flash_attention_xla`` — pure-XLA blocked attention with online softmax
+    (lax.scan over query/key blocks, O(S·block) memory).  This is the path
+    the multi-pod dry-run lowers; for sliding-window attention only the
+    in-band KV blocks are visited (truly sub-quadratic FLOPs).
+  * Pallas kernel (kernels/flash_attention.py) — TPU target, selected with
+    ``use_pallas=True`` (validated in interpret mode on CPU).
+  * ``decode_attention`` — single-token query against a (possibly ring-
+    buffered) KV cache.
+
+Shapes: q (B, S, H, D); k, v (B, S, Hkv, D); H = Hkv * G.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_heads(q, n_kv: int):
+    """(B, S, H, D) -> (B, S, Hkv, G, D)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def attention_reference(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """Unblocked reference (used by tests & tiny smoke configs).
+
+    q_offset: absolute position of q[0] (for cached prefill continuation).
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    qg = _split_heads(q, hkv)                              # (B,Sq,Hkv,G,D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _attn_block(qg, kb, vb, qpos, kpos, causal, window):
+    """One (q-block, kv-block) tile with masking; returns (s, m, raw p, pv)."""
+    d = qg.shape[-1]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * (1.0 / jnp.sqrt(d))
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if window is not None:
+        mask = mask & ((qpos[:, None] - kpos[None, :]) < window)
+    return jnp.where(mask[None, None, None], scores, NEG_INF)
+
+
+def flash_attention_xla(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Blocked attention with online softmax (flash algorithm in XLA).
+
+    For ``window`` set, only ceil((window+q_block)/kv_block) KV blocks are
+    visited per query block via dynamic_slice -> sub-quadratic compute.
+
+    Differentiation goes through a custom VJP that RECOMPUTES the score
+    tiles in the backward pass (true flash backward): without it, autodiff
+    through the forward scan saves O(S^2) probability matrices per layer —
+    the dominant HBM-traffic term found by the §Perf profile.
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    if sq < q_block or sq % q_block or sk % kv_block:
+        return attention_reference(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset)
+    return _flash_custom(q, k, v, causal, window, q_block, kv_block, q_offset)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_custom(q, k, v, causal, window, q_block, kv_block, q_offset):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block,
+                             q_offset)
+    return out
+
+
+def _flash_custom_fwd(q, k, v, causal, window, q_block, kv_block, q_offset):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block,
+                               q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_custom_bwd(causal, window, q_block, kv_block, q_offset, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    scale = 1.0 / (d ** 0.5)
+    nq = sq // q_block
+
+    # D_i = rowsum(dout * out)  (B, Sq, H)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)
+
+    def reshape_q(t):                                  # (nq,B,Bq,Hkv,G,D)
+        return jnp.moveaxis(
+            _split_heads(t, hkv).reshape(b, nq, q_block, hkv, g, d), 1, 0)
+
+    qb_all = reshape_q(q)
+    dob_all = reshape_q(dout)
+    lse_b = jnp.moveaxis(                              # (nq,B,Hkv,G,Bq)
+        lse.reshape(b, nq, q_block, hkv, g), 1, 0).transpose(0, 1, 3, 4, 2)
+    del_b = jnp.moveaxis(
+        delta.reshape(b, nq, q_block, hkv, g), 1, 0).transpose(0, 1, 3, 4, 2)
+
+    span = sk
+    if window is not None:
+        span = min(((window + q_block + kv_block - 1) // kv_block) * kv_block,
+                   sk)
+
+    def q_body(carry, inp):
+        dk_acc, dv_acc = carry
+        qi, qblk, dob, lse_i, del_i = inp
+        qpos = q_offset + qi * q_block + jnp.arange(q_block)
+        start = (jnp.clip(q_offset + (qi + 1) * q_block - span, 0, sk - span)
+                 if window is not None else 0)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        kpos = start + jnp.arange(span)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qblk.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        mask = jnp.ones((q_block, span), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        p = jnp.where(mask[None, None, None],
+                      jnp.exp(s - lse_i[..., None]), 0.0)
+        dv_blk = jnp.einsum("bkgqs,bqkgd->bskd", p, dob.astype(jnp.float32))
+        dp = jnp.einsum("bqkgd,bskd->bkgqs", dob.astype(jnp.float32),
+                        vb.astype(jnp.float32))
+        ds = p * (dp - del_i[..., None])
+        dq_blk = jnp.einsum("bkgqs,bskd->bqkgd", ds,
+                            kb.astype(jnp.float32)) * scale
+        dk_blk = jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                            qblk.astype(jnp.float32)) * scale
+        upd = lambda acc, blk: jax.lax.dynamic_update_slice_in_dim(
+            acc, jax.lax.dynamic_slice_in_dim(acc, start, span, 1) + blk,
+            start, axis=1)
+        return (upd(dk_acc, dk_blk), upd(dv_acc, dv_blk)), dq_blk
+
+    dk0 = jnp.zeros((b, sk, hkv, d), jnp.float32)
+    dv0 = jnp.zeros((b, sk, hkv, d), jnp.float32)
+    (dk, dv), dq_blocks = jax.lax.scan(
+        q_body, (dk0, dv0),
+        (jnp.arange(nq), qb_all, dob_all, lse_b, del_b))
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(b, sq, h, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_custom.defvjp(_flash_custom_fwd, _flash_custom_bwd)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block, q_offset):
+    """Returns (out (B,Sq,H,D), lse (B,Sq,H) f32)."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+
+    nq = sq // q_block
+    qg = _split_heads(q, hkv).reshape(b, nq, q_block, hkv, g, d)
+    qg = jnp.moveaxis(qg, 1, 0)                                 # (nq,B,Bq,Hkv,G,D)
+    kpos_all = jnp.arange(sk)
+
+    if window is not None:
+        # banded path: fixed-width KV span per query block
+        span = ((window + q_block + kv_block - 1) // kv_block) * kv_block
+        span = min(span, sk)
+
+        def q_body(_, inputs):
+            qi, qblk = inputs
+            qpos = q_offset + qi * q_block + jnp.arange(q_block)
+            start = jnp.clip(q_offset + (qi + 1) * q_block - span, 0, sk - span)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kpos = start + jnp.arange(span)
+            s = _attn_block(qblk, kb, vb, qpos, kpos, causal, window)
+            m = jnp.max(s, axis=-1, keepdims=True)
+            p = jnp.exp(s - m)
+            l = jnp.sum(p, axis=-1, keepdims=True)
+            o = jnp.einsum("bkgqs,bskd->bqkgd", p / jnp.maximum(l, 1e-30),
+                           vb.astype(jnp.float32))
+            lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]   # (B,Hkv,G,Bq)
+            lse = lse.transpose(0, 3, 1, 2).reshape(b, q_block, h)
+            return None, (o.reshape(b, q_block, h, d), lse)
+
+        _, (blocks, lses) = jax.lax.scan(q_body, None, (jnp.arange(nq), qg))
+        out = jnp.moveaxis(blocks, 0, 1).reshape(b, sq, h, d)
+        lse = jnp.moveaxis(lses, 0, 1).reshape(b, sq, h)
+        return out.astype(q.dtype), lse
+
+    # full (causal or bidirectional) path: online softmax over all kv blocks
+    nk = sk // kv_block
+    kb_all = k.reshape(b, nk, kv_block, hkv, d)
+    vb_all = v.reshape(b, nk, kv_block, hkv, d)
+
+    def q_body(_, inputs):
+        qi, qblk = inputs
+        qpos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def kv_body(carry, kv_in):
+            o_acc, m_acc, l_acc = carry
+            ki, kb, vb = kv_in
+            kpos = ki * kv_block + jnp.arange(kv_block)
+            s = _attn_block(qblk, kb, vb, qpos, kpos, causal, None)
+            m_new = jnp.maximum(m_acc, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            scale = jnp.exp(m_acc - m_new)
+            l_new = l_acc * scale + jnp.sum(p, axis=-1, keepdims=True)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+            o_new = o_acc * scale[..., 0][..., None] + pv
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((b, hkv, g, q_block, d), jnp.float32)
+        m0 = jnp.full((b, hkv, g, q_block, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block, 1), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(
+            kv_body, (o0, m0, l0),
+            (jnp.arange(nk), jnp.moveaxis(kb_all, 1, 0), jnp.moveaxis(vb_all, 1, 0)),
+        )
+        o = o / jnp.maximum(l[..., 0][..., None], 1e-30)
+        o = jnp.moveaxis(o, 3, 1).reshape(b, q_block, h, d)    # (B,Bq,H,D)
+        lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]     # (B,Hkv,G,Bq)
+        lse = lse.transpose(0, 3, 1, 2).reshape(b, q_block, h)
+        return None, (o, lse)
+
+    _, (blocks, lses) = jax.lax.scan(q_body, None, (jnp.arange(nq), qg))
+    out = jnp.moveaxis(blocks, 0, 1).reshape(b, sq, h, d)
+    lse = jnp.moveaxis(lses, 0, 1).reshape(b, sq, h)
+    return out.astype(q.dtype), lse
+
+
+def decode_attention(q1, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None,
+                     ring: bool = False) -> jnp.ndarray:
+    """One-token decode: q1 (B, 1, H, D) vs cache (B, Sc, Hkv, D).
+
+    cache_len: number of valid cached tokens (new token already written).
+    ring=True: the cache is a ring buffer of size `window`; slot i holds
+    absolute position p where p % window == i.
+    """
+    b, _, h, d = q1.shape
+    _, sc, hkv, _ = k_cache.shape
+    qg = _split_heads(q1, hkv)[:, 0]                          # (B,Hkv,G,D)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / jnp.sqrt(d)
+    slot = jnp.arange(sc)
+    if ring:
+        assert window is not None and sc == window
+        # absolute position of each slot given cache_len tokens seen
+        cur = cache_len - 1                                   # newest position
+        pos = slot + (jnp.ceil((cur + 1 - slot) / sc)).astype(slot.dtype) * sc - sc
+        valid = (pos >= 0) & (pos >= cache_len - window) & (pos <= cur)
+    else:
+        valid = slot < cache_len
+        if window is not None:
+            valid &= slot >= cache_len - window
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q1.dtype)

@@ -1,0 +1,244 @@
+"""Composable model blocks: unified decoder block (GQA/SWA/qk-norm,
+SwiGLU-FFN or MoE), whisper encoder/decoder blocks, hymba hybrid block.
+
+All blocks are (init, apply) function pairs over explicit param pytrees so
+layers can be stacked with ``jax.lax.scan`` (homogeneous params) by the
+model builders.  Attention runs through the blocked-XLA flash path by
+default and through the Pallas kernel on TPU (see kernels/ops.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn import moe as M
+from repro.nn import ssm as S
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCfg:
+    """Static per-architecture block hyperparameters."""
+
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    head_dim: int = 0                   # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    window: Optional[int] = None        # sliding-window width (None = full)
+    rope_theta: float = 10000.0
+    n_experts: int = 0                  # 0 -> dense FFN
+    top_k: int = 2
+    ssm_state: int = 0                  # >0 -> hymba parallel SSM branch
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# attention sub-layer
+# ---------------------------------------------------------------------------
+def attn_init(rng, cfg: BlockCfg, dtype=jnp.float32):
+    dh = cfg.dh
+    r = jax.random.split(rng, 4)
+    s = (1.0 / cfg.d_model) ** 0.5
+    p = {
+        "wq": (jax.random.normal(r[0], (cfg.d_model, cfg.n_heads * dh), jnp.float32)
+               * s).astype(dtype),
+        "wkv": (jax.random.normal(r[1], (cfg.d_model, 2 * cfg.n_kv * dh), jnp.float32)
+                * s).astype(dtype),
+        "wo": (jax.random.normal(r[2], (cfg.n_heads * dh, cfg.d_model), jnp.float32)
+               * (1.0 / (cfg.n_heads * dh)) ** 0.5).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(dh, dtype)
+        p["k_norm"] = L.rmsnorm_init(dh, dtype)
+    return p
+
+
+def _qkv(params, x, cfg: BlockCfg, positions):
+    b, s, _ = x.shape
+    dh = cfg.dh
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, dh)
+    kv = (x @ params["wkv"]).reshape(b, s, 2 * cfg.n_kv, dh)
+    k, v = kv[:, :, : cfg.n_kv], kv[:, :, cfg.n_kv :]
+    if cfg.qk_norm:
+        q = L.rmsnorm_apply(params["q_norm"], q)
+        k = L.rmsnorm_apply(params["k_norm"], k)
+    if cfg.mrope_sections is not None:
+        if positions.ndim == 2:        # text-only: t/h/w positions coincide
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = L.apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = L.apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(params, x, cfg: BlockCfg, positions, *, causal: bool = True):
+    """Full-sequence attention: x (B, S, D) -> (B, S, D)."""
+    q, k, v = _qkv(params, x, cfg, positions)
+    o = A.flash_attention_xla(q, k, v, causal=causal, window=cfg.window)
+    b, s, _, _ = q.shape
+    return o.reshape(b, s, -1) @ params["wo"]
+
+
+def attn_decode(params, x1, cfg: BlockCfg, pos, kv_cache, cache_len, *,
+                ring: bool = False):
+    """One-token decode.  kv_cache: (k (B,Sc,Hkv,dh), v); returns
+    (y1, new_cache).  `pos` is the absolute position (B,1) or scalar."""
+    positions = jnp.reshape(pos, (1, 1)) if jnp.ndim(pos) == 0 else pos
+    q, k, v = _qkv(params, x1, cfg, positions)
+    kc, vc = kv_cache
+    slot = (cache_len % kc.shape[1]) if ring else cache_len
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, axis=1)
+    o = A.decode_attention(q, kc, vc, cache_len + 1, window=cfg.window, ring=ring)
+    y = o.reshape(x1.shape[0], 1, -1) @ params["wo"]
+    return y, (kc, vc)
+
+
+# ---------------------------------------------------------------------------
+# FFN sub-layer (SwiGLU) or MoE
+# ---------------------------------------------------------------------------
+def ffn_init(rng, cfg: BlockCfg, dtype=jnp.float32):
+    if cfg.n_experts:
+        return M.moe_init(rng, cfg.n_experts, cfg.d_model, cfg.d_ff, dtype)
+    r = jax.random.split(rng, 3)
+    s_in = (2.0 / cfg.d_model) ** 0.5
+    return {
+        "w_gate": (jax.random.normal(r[0], (cfg.d_model, cfg.d_ff), jnp.float32)
+                   * s_in).astype(dtype),
+        "w_up": (jax.random.normal(r[1], (cfg.d_model, cfg.d_ff), jnp.float32)
+                 * s_in).astype(dtype),
+        "w_down": (jax.random.normal(r[2], (cfg.d_ff, cfg.d_model), jnp.float32)
+                   * (1.0 / cfg.d_ff) ** 0.5).astype(dtype),
+    }
+
+
+def ffn_apply(params, x, cfg: BlockCfg):
+    if cfg.n_experts:
+        b, s, d = x.shape
+        y = M.moe_apply(params, x.reshape(b * s, d), top_k=cfg.top_k)
+        return y.reshape(b, s, d)
+    g = jax.nn.silu(x @ params["w_gate"])
+    return (g * (x @ params["w_up"])) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# unified decoder block
+# ---------------------------------------------------------------------------
+def block_init(rng, cfg: BlockCfg, dtype=jnp.float32):
+    r = jax.random.split(rng, 3)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(r[0], cfg, dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+        "ffn": ffn_init(r[1], cfg, dtype),
+    }
+    if cfg.ssm_state:                   # hymba: parallel SSM branch
+        p["ssm"] = S.ssm_init(r[2], cfg.d_model, cfg.ssm_state, dtype=dtype)
+        p["mix_a"] = jnp.ones((), dtype)
+        p["mix_s"] = jnp.ones((), dtype)
+    return p
+
+
+def block_apply(params, x, cfg: BlockCfg, positions):
+    h = L.rmsnorm_apply(params["ln1"], x)
+    mix = attn_apply(params["attn"], h, cfg, positions)
+    if cfg.ssm_state:
+        sm = S.ssm_apply(params["ssm"], h)
+        mix = params["mix_a"] * mix + params["mix_s"] * sm
+    x = x + mix
+    h = L.rmsnorm_apply(params["ln2"], x)
+    return x + ffn_apply(params["ffn"], h, cfg)
+
+
+def block_decode(params, x1, cfg: BlockCfg, pos, state, *, ring: bool = False):
+    """state: {'kv': (k, v), 'len': int scalar, 'ssm': optional}."""
+    h = L.rmsnorm_apply(params["ln1"], x1)
+    mix, kv = attn_decode(params["attn"], h, cfg, pos, state["kv"],
+                          state["len"], ring=ring)
+    new_state = dict(state, kv=kv, len=state["len"] + 1)
+    if cfg.ssm_state:
+        sm, sst = S.ssm_decode_step(params["ssm"], h, state["ssm"])
+        mix = params["mix_a"] * mix + params["mix_s"] * sm
+        new_state["ssm"] = sst
+    x1 = x1 + mix
+    h = L.rmsnorm_apply(params["ln2"], x1)
+    return x1 + ffn_apply(params["ffn"], h, cfg), new_state
+
+
+# ---------------------------------------------------------------------------
+# whisper-style encoder / decoder blocks (pre-LN, GELU MLP, abs pos handled
+# by the model; encoder attention is bidirectional, decoder adds cross-attn)
+# ---------------------------------------------------------------------------
+def enc_block_init(rng, cfg: BlockCfg, dtype=jnp.float32):
+    r = jax.random.split(rng, 2)
+    return {
+        "ln1": L.layernorm_init(cfg.d_model, dtype),
+        "attn": attn_init(r[0], cfg, dtype),
+        "ln2": L.layernorm_init(cfg.d_model, dtype),
+        "ffn": ffn_init(r[1], cfg, dtype),
+    }
+
+
+def enc_block_apply(params, x, cfg: BlockCfg, positions):
+    h = L.layernorm_apply(params["ln1"], x)
+    x = x + attn_apply(params["attn"], h, cfg, positions, causal=False)
+    h = L.layernorm_apply(params["ln2"], x)
+    g = jax.nn.gelu(h @ params["ffn"]["w_gate"])
+    return x + (g * (h @ params["ffn"]["w_up"])) @ params["ffn"]["w_down"]
+
+
+def dec_block_init(rng, cfg: BlockCfg, dtype=jnp.float32):
+    r = jax.random.split(rng, 3)
+    return {
+        "ln1": L.layernorm_init(cfg.d_model, dtype),
+        "self_attn": attn_init(r[0], cfg, dtype),
+        "ln_x": L.layernorm_init(cfg.d_model, dtype),
+        "cross_attn": attn_init(r[1], cfg, dtype),
+        "ln2": L.layernorm_init(cfg.d_model, dtype),
+        "ffn": ffn_init(r[2], cfg, dtype),
+    }
+
+
+def _cross_attn(params, x, enc_out, cfg: BlockCfg):
+    b, s, _ = x.shape
+    dh = cfg.dh
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, dh)
+    se = enc_out.shape[1]
+    kv = (enc_out @ params["wkv"]).reshape(b, se, 2 * cfg.n_kv, dh)
+    k, v = kv[:, :, : cfg.n_kv], kv[:, :, cfg.n_kv :]
+    o = A.attention_reference(q, k, v, causal=False)
+    return o.reshape(b, s, -1) @ params["wo"]
+
+
+def dec_block_apply(params, x, enc_out, cfg: BlockCfg, positions):
+    h = L.layernorm_apply(params["ln1"], x)
+    x = x + attn_apply(params["self_attn"], h, cfg, positions, causal=True)
+    h = L.layernorm_apply(params["ln_x"], x)
+    x = x + _cross_attn(params["cross_attn"], h, enc_out, cfg)
+    h = L.layernorm_apply(params["ln2"], x)
+    g = jax.nn.gelu(h @ params["ffn"]["w_gate"])
+    return x + (g * (h @ params["ffn"]["w_up"])) @ params["ffn"]["w_down"]
+
+
+def dec_block_decode(params, x1, enc_out, cfg: BlockCfg, pos, state):
+    h = L.layernorm_apply(params["ln1"], x1)
+    mix, kv = attn_decode(params["self_attn"], h, cfg, pos, state["kv"], state["len"])
+    x1 = x1 + mix
+    h = L.layernorm_apply(params["ln_x"], x1)
+    x1 = x1 + _cross_attn(params["cross_attn"], h, enc_out, cfg)
+    h = L.layernorm_apply(params["ln2"], x1)
+    g = jax.nn.gelu(h @ params["ffn"]["w_gate"])
+    y = x1 + (g * (h @ params["ffn"]["w_up"])) @ params["ffn"]["w_down"]
+    return y, dict(state, kv=kv, len=state["len"] + 1)

@@ -1,0 +1,182 @@
+"""Mixture-of-Experts layer (Mixtral / Phi-3.5-MoE style).
+
+Top-k routing with **group-local capacity dispatch** (the GShard /
+MaxText pattern adapted to pjit): tokens are split into G groups aligned
+with the ('pod','data') mesh axes, each group routes its own tokens into
+per-expert capacity buffers with scatter/gather (never an O(T x E x cap)
+one-hot), and the expert SwiGLU FFNs run as one batched einsum over the
+(group, expert) axes.  Because routing, scatter, and gather all stay
+within a group, pjit partitions them on the group axis with no global
+all-gather of the token stream — the dispatch collective reduces to the
+expert einsums' usual TP all-reduces.
+
+Tokens overflowing an expert's *per-group* capacity are dropped (standard
+GShard behaviour — group-local capacity also matches how Mixtral-style
+deployments bound the all-to-all); the router runs in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+
+
+def moe_init(rng, n_experts: int, d_model: int, d_ff: int, dtype=jnp.float32):
+    r1, r2, r3, r4 = jax.random.split(rng, 4)
+    s_in = (2.0 / d_model) ** 0.5
+    s_out = (1.0 / d_ff) ** 0.5
+    return {
+        "router": (jax.random.normal(r1, (d_model, n_experts), jnp.float32) * 0.02
+                   ).astype(dtype),
+        "w_gate": (jax.random.normal(r2, (n_experts, d_model, d_ff), jnp.float32)
+                   * s_in).astype(dtype),
+        "w_up": (jax.random.normal(r3, (n_experts, d_model, d_ff), jnp.float32)
+                 * s_in).astype(dtype),
+        "w_down": (jax.random.normal(r4, (n_experts, d_ff, d_model), jnp.float32)
+                   * s_out).astype(dtype),
+    }
+
+
+def route_topk(router_logits: jnp.ndarray, top_k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., E) logits -> (..., K) expert indices and normalized weights."""
+    w, idx = jax.lax.top_k(router_logits, top_k)
+    w = jax.nn.softmax(w.astype(jnp.float32), axis=-1)
+    return idx, w
+
+
+def _dispatch_group(x, idx, wts, e: int, cap: int):
+    """Group-local dispatch.  x (Tg, D); idx/wts (Tg, K).
+    Returns (buf_tok (E*cap,), occupied (E*cap,), slot (Tg*K,), keep (Tg*K,))."""
+    t, top_k = idx.shape
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)     # (Tg, K, E)
+    flat = onehot.reshape(t * top_k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat                  # slot within expert
+    pos = jnp.sum(pos * flat, axis=-1).reshape(t, top_k)
+    keep = (pos < cap).reshape(t * top_k)
+    pos_c = jnp.minimum(pos, cap - 1).astype(jnp.int32)
+    slot = (idx.astype(jnp.int32) * cap + pos_c).reshape(t * top_k)
+    token_of = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[:, None],
+                                (t, top_k)).reshape(t * top_k)
+    slot_safe = jnp.where(keep, slot, e * cap)             # dropped -> overflow
+    buf_tok = jnp.zeros((e * cap + 1,), jnp.int32).at[slot_safe].set(
+        token_of, mode="drop")[:-1]
+    occupied = jnp.zeros((e * cap + 1,), jnp.float32).at[slot_safe].set(
+        keep.astype(jnp.float32), mode="drop")[:-1]
+    return buf_tok, occupied, slot, keep
+
+
+def _num_groups(t: int) -> int:
+    """Groups = the ('pod','data') mesh extent when it divides T."""
+    from repro.train import shardings as SH
+    mesh = SH.current_mesh()
+    if mesh is None:
+        return 1
+    g = SH.axis_size(mesh, SH.batch_axes(mesh))
+    return g if g > 1 and t % g == 0 else 1
+
+
+def moe_apply(
+    params,
+    x: jnp.ndarray,              # (T, Dm) flattened tokens
+    *,
+    top_k: int = 2,
+    capacity_factor: float = 1.25,
+    aux_loss: bool = False,
+):
+    """Returns (T, Dm) [and the load-balancing aux loss if requested]."""
+    t, dm = x.shape
+    e = params["router"].shape[-1]
+    g = _num_groups(t)
+    tg = t // g
+    cap = max(int(capacity_factor * top_k * tg / e), 1)
+
+    from repro.train import shardings as SH
+
+    def _c(arr, *axes):
+        mesh = SH.current_mesh()
+        if mesh is None:
+            return arr
+        from jax.sharding import PartitionSpec as P
+        spec = []
+        for dim, ax in zip(arr.shape, axes):
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax if a in mesh.shape) or None
+            elif ax is not None and ax not in mesh.shape:
+                ax = None
+            size = SH.axis_size(mesh, ax) if ax is not None else 1
+            spec.append(ax if ax is not None and dim % size == 0 else None)
+        return SH.constrain(arr, P(*spec))
+
+    ba = ("pod", "data")
+    # expert parallelism when E divides the 'model' axis (else TP on F)
+    mesh = SH.current_mesh()
+    e_par = (mesh is not None and "model" in mesh.shape
+             and e % SH.axis_size(mesh, "model") == 0)
+    e_ax = "model" if e_par else None
+    f_ax = None if e_par else "model"
+    xg = _c(x.reshape(g, tg, dm), ba, None, None)
+    logits = (xg.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    idx, wts = route_topk(logits, top_k)                   # (G,Tg,K)
+
+    buf_tok, occupied, slot, keep = jax.vmap(
+        lambda xx, ii, ww: _dispatch_group(xx, ii, ww, e, cap))(xg, idx, wts)
+    # buf_tok/occupied (G, E*cap); slot/keep (G, Tg*K)
+
+    # expert compute in f32: a bf16 variant was tried (§Perf B iter. 5)
+    # and REGRESSED the collective term 9% — XLA pairs the narrower
+    # buffers with extra convert/reshard collectives; keep f32
+    cdt = jnp.float32
+    xe = jnp.take_along_axis(xg.astype(cdt),
+                             buf_tok[..., None], axis=1)   # (G, E*cap, D)
+    xe = (xe * occupied[..., None].astype(cdt)).reshape(g, e, cap, dm)
+    xe = _c(xe, ba, e_ax, None, None)
+    gg = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe,
+                                params["w_gate"].astype(cdt),
+                                preferred_element_type=jnp.float32))
+    uu = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(cdt),
+                    preferred_element_type=jnp.float32)
+    gg = _c(gg.astype(cdt), ba, e_ax, None, f_ax)
+    uu = _c(uu.astype(cdt), ba, e_ax, None, f_ax)
+    ye = jnp.einsum("gecf,efd->gecd", gg * uu,
+                    params["w_down"].astype(cdt),
+                    preferred_element_type=jnp.float32).astype(cdt)
+    ye = _c(ye, ba, e_ax, None, None)
+
+    # combine: each kept assignment needs its slot's output back
+    w_keep = (wts.reshape(g, tg * top_k, 1)
+              * keep[..., None].astype(jnp.float32))
+    if e_par:
+        # expert-parallel combine: gather WITHIN each expert's (local)
+        # buffer by capacity position, select the owning expert with a
+        # one-hot contraction over E — lowers to per-shard work plus one
+        # all-reduce of the (G, TgK, D) outputs instead of an all-gather
+        # of the (G, E, cap, D) buffers across the expert axis
+        # (§Perf B iteration 4).
+        pos_idx = jnp.minimum(slot % cap, cap - 1)          # (G, Tg*K)
+        gathered = jnp.take_along_axis(
+            ye, pos_idx[:, None, :, None], axis=2)          # (G, E, TgK, D)
+        gathered = _c(gathered, ba, "model", None, None)
+        own = jax.nn.one_hot(slot // cap, e, dtype=ye.dtype)  # (G,TgK,E)
+        per_assign = jnp.einsum("getd,gte->gtd", gathered, own,
+                                preferred_element_type=jnp.float32)
+        per_assign = _c(per_assign, ba, None, None)
+    else:
+        per_assign = jnp.take_along_axis(
+            ye.reshape(g, e * cap, dm),
+            jnp.minimum(slot, e * cap - 1)[..., None], axis=1)  # (G, Tg*K, D)
+        per_assign = _c(per_assign, ba, None, None)
+    per_assign = per_assign * w_keep
+    y = jnp.sum(per_assign.reshape(g, tg, top_k, dm), axis=2)
+    y = y.reshape(t, dm).astype(x.dtype)
+
+    if not aux_loss:
+        return y
+    # Switch-style load-balancing loss (over all tokens)
+    onehot1 = jax.nn.one_hot(idx[..., 0].reshape(-1), e, dtype=jnp.float32)
+    me = jnp.mean(onehot1, axis=0)
+    pe = jnp.mean(jax.nn.softmax(logits.reshape(-1, e), -1), axis=0)
+    return y, e * jnp.sum(me * pe)

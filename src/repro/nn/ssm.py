@@ -1,0 +1,148 @@
+"""Selective state-space (Mamba-style) mixer — used by the hymba hybrid.
+
+x (B, S, D) -> y (B, S, D) with per-channel selective SSM state of size N.
+The recurrence is a ``jax.lax.scan`` over the sequence (one while-loop in
+HLO regardless of S); decoding keeps an explicit (B, D, N) state and a
+(B, K-1, D) conv tail so one token costs O(D*N).
+
+Hardware note: the scan keeps the (B, D, N) state resident; on TPU the
+per-step work is elementwise VPU work plus a (D, N) contraction — the
+design follows the paper's *insight* (input-dependent gating of a linear
+state) rather than the CUDA kernel structure of the original Mamba.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_init(rng, d_model: int, d_state: int = 16, d_conv: int = 4,
+             expand: int = 2, dtype=jnp.float32):
+    d_inner = expand * d_model
+    r = jax.random.split(rng, 6)
+    s = (2.0 / d_model) ** 0.5
+    return {
+        "in_proj": (jax.random.normal(r[0], (d_model, 2 * d_inner), jnp.float32) * s
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(r[1], (d_conv, d_inner), jnp.float32) * 0.2
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        # x -> (dt, B, C) projections
+        "x_proj": (jax.random.normal(r[2], (d_inner, 1 + 2 * d_state), jnp.float32)
+                   * (1.0 / d_inner) ** 0.5).astype(dtype),
+        "dt_bias": jnp.full((d_inner,), -4.6, dtype),     # softplus^-1(0.01)
+        "dt_w": (jax.random.normal(r[3], (1, d_inner), jnp.float32) * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                  (d_inner, 1))).astype(dtype),
+        "D_skip": jnp.ones((d_inner,), dtype),
+        "out_proj": (jax.random.normal(r[4], (d_inner, d_model), jnp.float32)
+                     * (1.0 / d_inner) ** 0.5).astype(dtype),
+    }
+
+
+def _conv_causal(x, w, b, tail: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along seq. x (B,S,Di), w (K,Di).
+
+    tail: (B, K-1, Di) previous inputs for decode continuation."""
+    k = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                # (B, S+K-1, Di)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
+    return out + b[None, None]
+
+
+def ssm_scan(params, xz: jnp.ndarray, h0: Optional[jnp.ndarray] = None,
+             chunk: int = 64):
+    """Core selective scan.  xz (B, S, 2*Di) from in_proj; returns
+    (y (B,S,Di-projected..), h_final (B, Di, N)).
+
+    Two-level chunked scan: the (B, S, Di, N) transition tensors are never
+    materialized over the full sequence (only per chunk, inside a
+    ``jax.checkpoint``-ed body), and backward saves the (B, Di, N) state
+    only at chunk boundaries — O(S/chunk + chunk) memory instead of O(S).
+    """
+    d_inner = params["conv_w"].shape[1]
+    d_state = (params["x_proj"].shape[1] - 1) // 2
+    x, z = jnp.split(xz, 2, axis=-1)                      # (B,S,Di) each
+    x = jax.nn.silu(_conv_causal(x, params["conv_w"], params["conv_b"]))
+
+    proj = x @ params["x_proj"]                           # (B,S,1+2N)
+    dt = jax.nn.softplus(proj[..., :1] @ params["dt_w"] + params["dt_bias"])
+    bmat = proj[..., 1 : 1 + d_state]                     # (B,S,N)
+    cmat = proj[..., 1 + d_state :]                       # (B,S,N)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))     # (Di,N)
+
+    b, s, _ = x.shape
+    h = jnp.zeros((b, d_inner, d_state), jnp.float32) if h0 is None else h0
+
+    def step(hc, inp):
+        dt_t, b_t, c_t, x_t = inp                         # (B,Di),(B,N),(B,N),(B,Di)
+        da_t = jnp.exp(dt_t[..., None] * a[None])         # (B,Di,N)
+        dbx_t = dt_t[..., None] * b_t[:, None] * x_t[..., None]
+        hc = da_t * hc + dbx_t
+        y = jnp.einsum("bdn,bn->bd", hc, c_t)
+        return hc, y
+
+    mv = lambda t: jnp.moveaxis(t, 1, 0)                  # (S,B,...)
+    seqs = (mv(dt), mv(bmat), mv(cmat), mv(x))
+
+    if chunk > 1 and s % chunk == 0 and s > chunk:
+        nc = s // chunk
+
+        @jax.checkpoint
+        def chunk_body(hc, ch):
+            return jax.lax.scan(step, hc, ch)
+
+        chunked = tuple(t.reshape(nc, chunk, *t.shape[1:]) for t in seqs)
+        h, ys = jax.lax.scan(chunk_body, h, chunked)
+        ys = ys.reshape(s, *ys.shape[2:])
+    else:
+        h, ys = jax.lax.scan(step, h, seqs)
+
+    y = jnp.moveaxis(ys, 0, 1) + x * params["D_skip"][None, None]
+    y = y * jax.nn.silu(z)
+    return y.astype(xz.dtype), h
+
+
+def ssm_apply(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence mixer: (B, S, D) -> (B, S, D)."""
+    xz = x @ params["in_proj"]
+    y, _ = ssm_scan(params, xz)
+    return y @ params["out_proj"]
+
+
+def ssm_decode_init(params, batch: int):
+    """Empty decode state: (h, conv_tail)."""
+    d_inner = params["conv_w"].shape[1]
+    d_state = (params["x_proj"].shape[1] - 1) // 2
+    k = params["conv_w"].shape[0]
+    return (jnp.zeros((batch, d_inner, d_state), jnp.float32),
+            jnp.zeros((batch, k - 1, d_inner), jnp.float32))
+
+
+def ssm_decode_step(params, x1: jnp.ndarray, state):
+    """One-token decode: x1 (B, 1, D) -> (y1 (B, 1, D), new state)."""
+    h, tail = state
+    xz = x1 @ params["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)                      # (B,1,Di)
+    xc = jax.nn.silu(_conv_causal(x, params["conv_w"], params["conv_b"], tail=tail))
+    new_tail = jnp.concatenate([tail[:, 1:], x.astype(tail.dtype)], axis=1)
+
+    proj = xc @ params["x_proj"]
+    d_state = (params["x_proj"].shape[1] - 1) // 2
+    dt = jax.nn.softplus(proj[..., :1] @ params["dt_w"] + params["dt_bias"])
+    bmat = proj[..., 1 : 1 + d_state]
+    cmat = proj[..., 1 + d_state :]
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0, :, None] * a[None])             # (B,Di,N)
+    dbx = dt[:, 0, :, None] * bmat[:, 0, None] * xc[:, 0, :, None]
+    h = da * h + dbx
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None]
+    y = y + xc * params["D_skip"][None, None]
+    y = y * jax.nn.silu(z)
+    return (y @ params["out_proj"]).astype(x1.dtype), (h, new_tail)

@@ -1,0 +1,231 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+Both use stabilized exponential gating.  The mLSTM keeps a per-head matrix
+memory C (dh, dh) + normalizer n (dh,); the sLSTM keeps scalar memories
+with block-diagonal (per-head) recurrence.  Sequence mixing is a
+``lax.scan``; decoding carries the recurrent state explicitly so one token
+is O(dh^2) (mLSTM) / O(d) (sLSTM) — this is what makes the 500k-token
+decode shape feasible for this family.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+
+
+def _chunked_scan(cell, state, seqs, s: int, chunk: int = 64):
+    """Two-level scan: backward saves the carry only at chunk boundaries
+    (the inner body is rematerialized), turning the O(S) saved matrix
+    memories of the recurrent cells into O(S/chunk + chunk)."""
+    if chunk > 1 and s % chunk == 0 and s > chunk:
+        nc = s // chunk
+
+        @jax.checkpoint
+        def chunk_body(carry, ch):
+            return jax.lax.scan(cell, carry, ch)
+
+        chunked = tuple(t.reshape(nc, chunk, *t.shape[1:]) for t in seqs)
+        state, ys = jax.lax.scan(chunk_body, state, chunked)
+        return state, ys.reshape(s, *ys.shape[2:])
+    return jax.lax.scan(cell, state, seqs)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(rng, d_model: int, n_heads: int, dtype=jnp.float32):
+    dh = d_model // n_heads
+    r = jax.random.split(rng, 6)
+    s = (1.0 / d_model) ** 0.5
+    return {
+        "wqkv": (jax.random.normal(r[0], (d_model, 3 * d_model), jnp.float32) * s
+                 ).astype(dtype),
+        "wif": (jax.random.normal(r[1], (d_model, 2 * n_heads), jnp.float32) * s
+                ).astype(dtype),
+        "b_i": jnp.zeros((n_heads,), dtype),
+        "b_f": jnp.full((n_heads,), 3.0, dtype),          # forget-gate bias
+        "wo": (jax.random.normal(r[2], (d_model, d_model), jnp.float32) * s
+               ).astype(dtype),
+        "gn": L.rmsnorm_init(d_model, dtype),
+        "wz": (jax.random.normal(r[3], (d_model, d_model), jnp.float32) * s
+               ).astype(dtype),
+    }
+
+
+def _mlstm_cell(carry, inp):
+    """carry: (C (B,H,dh,dh), n (B,H,dh), m (B,H)); inp: q,k,v,(B,H,dh), i,f raw (B,H)."""
+    c, n, m = carry
+    q, k, v, i_raw, f_raw = inp
+    logf = jax.nn.log_sigmoid(f_raw)                      # (B,H)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)[..., None]               # (B,H,1)
+    f_g = jnp.exp(logf + m - m_new)[..., None]
+    c = f_g[..., None] * c + i_g[..., None] * (v[..., :, None] * k[..., None, :])
+    n = f_g * n + i_g * k
+    num = jnp.einsum("bhde,bhe->bhd", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), 1.0)[..., None]
+    h = num / den
+    return (c, n, m_new), h
+
+
+def mlstm_apply(params, x: jnp.ndarray, n_heads: int,
+                state: Optional[Tuple] = None, chunkwise: bool = True,
+                chunk: int = 64):
+    """(B, S, D) -> (B, S, D), final state.  state carries (C, n, m).
+
+    chunkwise=True uses the parallel chunk form (matmul-dominant; the
+    (dh, dh) matrix memory only materializes at chunk boundaries —
+    see mlstm_chunkwise).  The stepwise scan remains for decode and as
+    the numerical reference."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    qkv = x @ params["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    scale = 1.0 / (dh ** 0.5)
+    q = q.reshape(b, s, n_heads, dh).astype(jnp.float32)
+    k = (k.reshape(b, s, n_heads, dh) * scale).astype(jnp.float32)
+    v = v.reshape(b, s, n_heads, dh).astype(jnp.float32)
+    gi = (x @ params["wif"]).astype(jnp.float32)
+    i_raw = gi[..., :n_heads] + params["b_i"]
+    f_raw = gi[..., n_heads:] + params["b_f"]
+
+    if state is None:
+        state = (jnp.zeros((b, n_heads, dh, dh), jnp.float32),
+                 jnp.zeros((b, n_heads, dh), jnp.float32),
+                 jnp.full((b, n_heads), -1e30, jnp.float32))
+    if chunkwise and s % chunk == 0 and s >= chunk:
+        state, h = mlstm_chunkwise(q, k, v, i_raw, f_raw, state, chunk)
+        h = h.reshape(b, s, d).astype(x.dtype)
+    else:
+        mv = lambda a: jnp.moveaxis(a, 1, 0)
+        state, hs = _chunked_scan(_mlstm_cell, state,
+                                  (mv(q), mv(k), mv(v), mv(i_raw), mv(f_raw)), s)
+        h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    h = L.rmsnorm_apply(params["gn"], h)
+    h = h * jax.nn.silu(x @ params["wz"])                 # output gate branch
+    return h @ params["wo"], state
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, state, chunk: int):
+    """Chunkwise-parallel mLSTM (xLSTM appendix form, TPU-adapted).
+
+    Within a chunk the output is an attention-like masked product
+    (intra term, an (L, L) matmul on the MXU) plus the carried matrix
+    memory applied once (inter term); the (dh, dh) state is updated once
+    per chunk.  HBM traffic for the state drops from O(S * dh^2) to
+    O(S/L * dh^2) — the §Perf xlstm hillclimb (EXPERIMENTS.md).
+
+    q, k, v: (B, S, H, dh) f32 (k pre-scaled); i_raw, f_raw: (B, S, H).
+    state: (C (B,H,dh,dh), n (B,H,dh), m (B,H)).  Stored state carries the
+    exp(-m) stabilizer, matching `_mlstm_cell` bit-for-bit semantics.
+    """
+    b, s, h, dh = q.shape
+    nc = s // chunk
+    neg = -1e30
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)   # (nc,B,L,H,dh)
+    ic, fc = to_chunks(i_raw), to_chunks(f_raw)             # (nc,B,L,H)
+
+    def chunk_body(carry, inp):
+        c0, n0, m0 = carry                                  # (B,H,dh,dh) ...
+        qq, kk, vv, ii, ff = inp                            # (B,L,H,*)
+        logf = jax.nn.log_sigmoid(ff)                       # (B,L,H)
+        bcum = jnp.cumsum(logf, axis=1)                     # b_t, t=1..L
+        # intra log-weights a[t,s] = b_t - b_s + i_s  (s <= t)
+        a = (bcum[:, :, None] - bcum[:, None, :]
+             + ii[:, None, :, :])                           # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        a = jnp.where(tri[None, :, :, None], a, neg)
+        g = bcum + m0[:, None]                              # (B,L,H) carry weight
+        m_t = jnp.maximum(g, jnp.max(a, axis=2))            # (B,L,H)
+        w = jnp.exp(a - m_t[:, :, None])                    # (B,t,s,H)
+        cw = jnp.exp(g - m_t)                               # (B,L,H)
+
+        scores = jnp.einsum("blhd,bshd->blsh", qq, kk)      # (B,t,s,H)
+        wsc = w * scores
+        num = (jnp.einsum("blsh,bshd->blhd", wsc, vv)
+               + cw[..., None] * jnp.einsum("bhde,blhe->blhd", c0, qq))
+        den = (jnp.sum(wsc, axis=2)
+               + cw * jnp.einsum("bhd,blhd->blh", n0, qq))
+        hh = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]  # (B,L,H,dh)
+
+        # ---- state update (once per chunk) ----
+        m_l = m_t[:, -1]                                    # (B,H)
+        wl = jnp.exp(bcum[:, -1:, :] - bcum + ii - m_l[:, None])  # (B,s,H)
+        c_new = (jnp.exp(bcum[:, -1] + m0 - m_l)[..., None, None] * c0
+                 + jnp.einsum("bshd,bsh,bshe->bhde", vv, wl, kk))
+        n_new = (jnp.exp(bcum[:, -1] + m0 - m_l)[..., None] * n0
+                 + jnp.einsum("bsh,bshd->bhd", wl, kk))
+        return (c_new, n_new, m_l), hh
+
+    state, hs = jax.lax.scan(chunk_body, state, (qc, kc, vc, ic, fc))
+    hout = jnp.moveaxis(hs, 0, 1).reshape(b, s, h, dh)
+    return state, hout
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(rng, d_model: int, n_heads: int, dtype=jnp.float32):
+    r = jax.random.split(rng, 3)
+    s = (1.0 / d_model) ** 0.5
+    dh = d_model // n_heads
+    return {
+        "wx": (jax.random.normal(r[0], (d_model, 4 * d_model), jnp.float32) * s
+               ).astype(dtype),
+        # block-diagonal recurrence: per-head (dh, 4*dh)
+        "rh": (jax.random.normal(r[1], (n_heads, dh, 4 * dh), jnp.float32)
+               * (1.0 / dh) ** 0.5).astype(dtype),
+        "b": jnp.concatenate([jnp.zeros((2 * d_model,), jnp.float32),
+                              jnp.full((d_model,), 3.0, jnp.float32),
+                              jnp.zeros((d_model,), jnp.float32)]).astype(dtype),
+        "gn": L.rmsnorm_init(d_model, dtype),
+        "wo": (jax.random.normal(r[2], (d_model, d_model), jnp.float32) * s
+               ).astype(dtype),
+    }
+
+
+def slstm_apply(params, x: jnp.ndarray, n_heads: int,
+                state: Optional[Tuple] = None):
+    """(B, S, D) -> (B, S, D), final state (c, n, m, h)."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    wx = (x @ params["wx"]).astype(jnp.float32)           # (B,S,4D)
+
+    if state is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        state = (z, z + 1e-6, jnp.full((b, d), -1e30, jnp.float32), z)
+
+    rh = params["rh"].astype(jnp.float32)
+    bias = params["b"].astype(jnp.float32)
+
+    def cell(carry, inp):
+        (wx_t,) = inp
+        c, n, m, h_prev = carry
+        hh = h_prev.reshape(b, n_heads, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, rh).reshape(b, 4 * d)
+        pre = wx_t + rec + bias
+        z_t = jnp.tanh(pre[:, :d])
+        i_raw = pre[:, d : 2 * d]
+        f_raw = pre[:, 2 * d : 3 * d]
+        o_t = jax.nn.sigmoid(pre[:, 3 * d :])
+        logf = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(logf + m, i_raw)
+        i_g = jnp.exp(i_raw - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        c = f_g * c + i_g * z_t
+        n = f_g * n + i_g
+        h = o_t * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    state, hs = _chunked_scan(cell, state, (jnp.moveaxis(wx, 1, 0),), s)
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = L.rmsnorm_apply(params["gn"], h)
+    return h @ params["wo"], state

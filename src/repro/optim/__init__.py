@@ -1,0 +1,2 @@
+from repro.optim.adamw import adam, adamw, apply_updates, clip_by_global_norm  # noqa: F401
+from repro.optim.schedule import constant, cosine, linear_warmup_cosine  # noqa: F401

@@ -1,0 +1,89 @@
+"""Pure-JAX optimizers (no optax dependency).
+
+Functional API mirroring optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, state)``;
+``apply_updates(params, updates) -> params``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def _tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def adamw(
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    clip_norm: Optional[float] = None,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _s, _lr=lr: _lr)
+
+    def init(params):
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=_tree_zeros_like(params),
+                         nu=_tree_zeros_like(params))
+
+    def update(grads, state: AdamState, params=None):
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p
+            return u
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(lr, **kw) -> Optimizer:
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))

@@ -1,0 +1,201 @@
+"""Sharding rules for params, optimizer state, activations, and caches.
+
+Strategy (FSDP x TP hybrid, the framework default):
+  * weights: the feature/output dim of every projection is sharded over
+    the 'model' mesh axis (Megatron TP); the *other* large dim is sharded
+    over 'data' (ZeRO/FSDP) so params + Adam moments scale with the full
+    chip count.  The 'pod' axis is pure DP (params replicated across
+    pods; gradients all-reduced over ('pod','data')).
+  * activations: the residual stream saved at layer boundaries (the remat
+    save points) is sharded (batch -> ('pod','data'), d_model -> 'model').
+  * caches/recurrent state: batch over ('pod','data') when divisible;
+    otherwise the sequence dim goes to 'data' (long-context decode with
+    global_batch=1) and the head/feature dim to 'model'.
+
+Every rule checks divisibility and falls back to replication, so reduced
+smoke configs lower on 1 device with the same code path.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# mesh context (lets model code request constraints without carrying a mesh)
+# ---------------------------------------------------------------------------
+_CTX = {"mesh": None, "act_shard": "model"}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], act_shard: str = "model"):
+    """act_shard: how the residual stream's d_model axis is sharded at the
+    remat save points — 'model' (tensor-parallel style), 'seq' (sequence
+    parallel: shard S over 'model'), or 'none' (replicate)."""
+    prev = (_CTX["mesh"], _CTX["act_shard"])
+    _CTX["mesh"], _CTX["act_shard"] = mesh, act_shard
+    try:
+        yield
+    finally:
+        _CTX["mesh"], _CTX["act_shard"] = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX["mesh"]
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([axis_size(mesh, n) for n in name]))
+    return mesh.shape.get(name, 1) if name in mesh.shape else 1
+
+
+def _div(dim: int, mesh: Mesh, name) -> bool:
+    return name is not None and dim % axis_size(mesh, name) == 0
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint iff a mesh context is active."""
+    mesh = current_mesh()
+    if mesh is None or len(mesh.devices.flatten()) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def activation_spec(mesh: Mesh, batch: int, d_model: int,
+                    seq: Optional[int] = None) -> P:
+    """(B, S, D) residual-stream spec (policy set by use_mesh act_shard)."""
+    ba = batch_axes(mesh)
+    b_ax = ba if _div(batch, mesh, ba) else (("data",) if _div(batch, mesh, "data") else None)
+    policy = _CTX["act_shard"]
+    if policy == "seq" and seq is not None and _div(seq, mesh, "model"):
+        return P(b_ax, "model", None)
+    if policy == "model" and _div(d_model, mesh, "model"):
+        return P(b_ax, None, "model")
+    return P(b_ax, None, None)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules (matched on the leaf's key name; rank-agnostic — a
+# leading stacked-layer axis simply pads the spec with None on the left)
+# ---------------------------------------------------------------------------
+_LAST = {"wq", "wkv", "w_gate", "w_up", "in_proj", "wz", "wqkv", "wx",
+         "dt_w", "conv_w", "lm_head", "router"}
+_PENULT = {"wo", "w_down", "out_proj", "x_proj", "A_log", "rh"}
+_VOCAB_FIRST = {"table", "pos_embed"}       # embed: vocab over 'model'
+_VEC_MODEL = {"D_skip", "dt_bias"}          # 1-D inner-dim vectors
+
+
+def _param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                fsdp: bool = True) -> P:
+    name = path.split("/")[-1]
+    rank = len(shape)
+    spec = [None] * rank
+
+    def put(dim: int, ax: str):
+        if ax == "data" and not fsdp:
+            return
+        if 0 <= dim < rank and _div(shape[dim], mesh, ax) and spec[dim] is None:
+            spec[dim] = ax
+
+    if name in ("w_gate", "w_up", "w_down") and rank >= 3:
+        # MoE expert tensors (E, D, F) / (E, F, D): expert parallelism when
+        # the expert count divides the 'model' axis, else TP on the F dim.
+        e_dim = rank - 3
+        if _div(shape[e_dim], mesh, "model"):
+            put(e_dim, "model")
+            put(rank - 1 if name != "w_down" else rank - 2, "data")
+        elif name in _LAST:
+            put(rank - 1, "model")
+            put(rank - 2, "data")
+        else:
+            put(rank - 2, "model")
+            put(rank - 1, "data")
+    elif name in _LAST and rank >= 2:
+        put(rank - 1, "model")
+        put(rank - 2, "data")                      # FSDP on the other big dim
+    elif name in _PENULT and rank >= 2:
+        put(rank - 2, "model")
+        put(rank - 1, "data")
+    elif name in _VOCAB_FIRST and rank >= 2:
+        put(rank - 2, "model")
+        put(rank - 1, "data")
+    elif name in _VEC_MODEL and rank >= 1:
+        put(rank - 1, "model")
+    elif rank >= 2 and min(shape[-2:]) >= 256:     # any other big matrix: FSDP
+        put(rank - 1, "data")
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params, mesh: Mesh, fsdp: bool = True):
+    """Pytree of PartitionSpec matching `params`.  fsdp=False keeps weights
+    replicated across 'data' (pure DP + TP; trades HBM for fewer
+    all-gathers — a §Perf knob)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(_path_str(path), leaf.shape, mesh,
+                                       fsdp=fsdp), params
+    )
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
+
+
+# ---------------------------------------------------------------------------
+# decode/cache state rules (structural, shape-driven)
+# ---------------------------------------------------------------------------
+def state_spec(shape: Tuple[int, ...], mesh: Mesh, batch: int) -> P:
+    """Greedy structural spec for a decode-state leaf.
+
+    Convention (see models/base.spec_state_init): leaves are stacked with a
+    leading layer axis, then batch.  (L, B, S, H, D) KV caches, (L, B, H,
+    dh, dh) matrix memories, (L, B, D, N) SSM states, (L, B) scalars.
+    """
+    rank = len(shape)
+    spec = [None] * rank
+    if rank < 2:
+        return P(*spec)
+    used_model = False
+    ba = batch_axes(mesh)
+    data_used = False
+    if shape[1] == batch and _div(batch, mesh, ba):
+        spec[1] = ba
+        data_used = True
+    elif shape[1] == batch and _div(batch, mesh, "data"):
+        spec[1] = "data"
+        data_used = True
+    # remaining dims, largest first: give 'data' (if free) to the largest
+    # (the 500k sequence axis), 'model' to the next largest divisible.
+    order = sorted(range(2, rank), key=lambda i: -shape[i])
+    for i in order:
+        if not data_used and shape[i] >= 1024 and _div(shape[i], mesh, "data"):
+            spec[i] = "data"
+            data_used = True
+        elif not used_model and _div(shape[i], mesh, "model") and shape[i] > 1:
+            spec[i] = "model"
+            used_model = True
+    return P(*spec)
+
+
+def state_specs(states, mesh: Mesh, batch: int):
+    return jax.tree.map(lambda leaf: state_spec(leaf.shape, mesh, batch), states)

@@ -1,0 +1,252 @@
+"""Step factories: train_step / prefill_step / decode_step per (arch x
+shape), plus ``build_case`` which packages the jittable function, its
+ShapeDtypeStruct inputs, and NamedShardings for the dry-run, benchmarks,
+and the real launchers.
+
+No device memory is allocated here: params/opt/caches are built with
+``jax.eval_shape`` so the 33B-param architectures lower on this CPU
+container.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import Shape
+from repro.models import base as MB
+from repro.optim import adamw, apply_updates
+from repro.train import shardings as SH
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def next_token_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross entropy; logits (B, S, V) may be vocab-sharded."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# train / serve step factories
+# ---------------------------------------------------------------------------
+def make_train_step(m: MB.ModelCfg, *, lr: float = 3e-4, remat: bool = True,
+                    mesh: Optional[Mesh] = None, microbatches: int = 1,
+                    act_shard: str = "model",
+                    grad_compress=None) -> Tuple[Callable, Any]:
+    """Returns (train_step, optimizer).  train_step(params, opt, batch) ->
+    (params, opt, metrics).
+
+    microbatches > 1 enables gradient accumulation: the global batch is
+    split along axis 0 and scanned, dividing activation memory by the
+    microbatch count at the cost of re-running the FSDP weight all-gathers
+    per microbatch (the §Perf memory<->collective trade-off knob).
+    `grad_compress` optionally wraps gradients (see optim/compress.py)."""
+    optim = adamw(lr, weight_decay=0.1, clip_norm=1.0)
+
+    def loss_fn(params, batch):
+        enc_out = None
+        if m.enc_segments is not None:
+            enc_out = MB.encode(params, m, batch["frames"], remat=remat)
+        logits = MB.forward(params, m, batch["tokens"],
+                            positions=batch.get("positions"),
+                            enc_out=enc_out, remat=remat)
+        return next_token_loss(logits, batch["labels"])
+
+    def grads_of(params, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            if x.ndim >= 2 and x.shape[0] == 3:      # vlm positions (3, B, S)
+                return jnp.moveaxis(
+                    x.reshape(3, microbatches, -1, *x.shape[2:]), 1, 0)
+            return x.reshape(microbatches, -1, *x.shape[1:])
+
+        micro = {k: split(v) for k, v in batch.items()}
+
+        def body(acc, mb):
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            acc_loss, acc_g = acc
+            return (acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_g, g)), None
+
+        zero = (jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss_sum, g_sum), _ = jax.lax.scan(body, zero, micro)
+        inv = 1.0 / microbatches
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+    def train_step(params, opt_state, batch):
+        with SH.use_mesh(mesh, act_shard=act_shard):
+            loss, grads = grads_of(params, batch)
+            if grad_compress is not None:
+                grads = grad_compress(grads)
+            updates, opt_state = optim.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss}
+
+    return train_step, optim
+
+
+def make_prefill_step(m: MB.ModelCfg, *, mesh: Optional[Mesh] = None) -> Callable:
+    def prefill_step(params, batch):
+        with SH.use_mesh(mesh):
+            enc_out = None
+            if m.enc_segments is not None:
+                enc_out = MB.encode(params, m, batch["frames"])
+            logits = MB.forward(params, m, batch["tokens"],
+                                positions=batch.get("positions"),
+                                enc_out=enc_out)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_decode_step(m: MB.ModelCfg, *, mesh: Optional[Mesh] = None) -> Callable:
+    def decode_step(params, token, pos, states, enc_out=None):
+        with SH.use_mesh(mesh):
+            logits, states = MB.decode_step(params, m, token, pos, states,
+                                            enc_out=enc_out)
+        return logits, states
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# shape-struct builders (no allocation)
+# ---------------------------------------------------------------------------
+WHISPER_DEC_LEN = 448
+
+
+def batch_structs(m: MB.ModelCfg, shape: Shape, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if m.enc_segments is not None:
+        # audio: cell seq_len = encoder frames; decoder native length
+        sd = min(WHISPER_DEC_LEN, s)
+        return {
+            "frames": jax.ShapeDtypeStruct((b, s, m.d_model), dtype),
+            "tokens": jax.ShapeDtypeStruct((b, sd), i32),
+            "labels": jax.ShapeDtypeStruct((b, sd), i32),
+        }
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        "labels": jax.ShapeDtypeStruct((b, s), i32),
+    }
+    if m.family == "vlm":
+        out["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+    return out
+
+
+def batch_specs(m: MB.ModelCfg, shape: Shape, mesh: Mesh) -> Dict[str, P]:
+    ba = SH.batch_axes(mesh)
+    b = shape.global_batch
+    b_ax = ba if b % SH.axis_size(mesh, ba) == 0 else (
+        "data" if b % SH.axis_size(mesh, "data") == 0 else None)
+    if m.enc_segments is not None:
+        return {"frames": P(b_ax, None, None), "tokens": P(b_ax, None),
+                "labels": P(b_ax, None)}
+    out = {"tokens": P(b_ax, None), "labels": P(b_ax, None)}
+    if m.family == "vlm":
+        out["positions"] = P(None, b_ax, None)
+    return out
+
+
+def param_structs(m: MB.ModelCfg, dtype=jnp.bfloat16):
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda r: MB.init_params(r, m, dtype), rng)
+
+
+def state_structs(params_struct, m: MB.ModelCfg, batch: int, cache_len: int,
+                  dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda p: MB.init_decode_state(p, m, batch, cache_len, dtype),
+        params_struct)
+
+
+# ---------------------------------------------------------------------------
+# the packaged case: everything the dry-run / benches need for one cell
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Case:
+    name: str
+    fn: Callable                 # jittable
+    args: Tuple[Any, ...]        # ShapeDtypeStructs
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _shardings_of(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_case(m: MB.ModelCfg, shape: Shape, mesh: Mesh, *,
+               dtype=jnp.bfloat16, lr: float = 3e-4,
+               remat: bool = True, microbatches: int = 1,
+               fsdp: bool = True, act_shard: str = "model") -> Case:
+    """One (arch x shape) dry-run cell on `mesh`.  The keyword knobs
+    (microbatches / remat / fsdp / act_shard) are the §Perf hillclimb
+    dimensions."""
+    p_struct = param_structs(m, dtype)
+    p_specs = SH.param_specs(p_struct, mesh, fsdp=fsdp)
+    p_sh = _shardings_of(p_specs, mesh)
+
+    if shape.kind == "train":
+        step, optim = make_train_step(m, lr=lr, remat=remat, mesh=mesh,
+                                      microbatches=microbatches,
+                                      act_shard=act_shard)
+        opt_struct = jax.eval_shape(optim.init, p_struct)
+        from repro.optim.adamw import AdamState
+        opt_sh = AdamState(step=NamedSharding(mesh, P()), mu=p_sh, nu=p_sh)
+        b_struct = batch_structs(m, shape, dtype)
+        b_sh = _shardings_of(batch_specs(m, shape, mesh), mesh)
+        return Case(
+            name=f"{m.name}:{shape.name}",
+            fn=step,
+            args=(p_struct, opt_struct, b_struct),
+            in_shardings=(p_sh, opt_sh, b_sh),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(m, mesh=mesh)
+        b_struct = batch_structs(m, shape, dtype)
+        if "labels" in b_struct:
+            del b_struct["labels"]
+        specs = batch_specs(m, shape, mesh)
+        specs.pop("labels", None)
+        b_sh = _shardings_of(specs, mesh)
+        return Case(f"{m.name}:{shape.name}", step, (p_struct, b_struct),
+                    (p_sh, b_sh))
+
+    # decode: one new token against a cache of seq_len
+    b = shape.global_batch
+    step = make_decode_step(m, mesh=mesh)
+    st_struct = state_structs(p_struct, m, b, shape.seq_len, dtype)
+    st_specs = SH.state_specs(st_struct, mesh, b)
+    st_sh = _shardings_of(st_specs, mesh)
+    ba = SH.batch_axes(mesh)
+    b_ax = ba if b % SH.axis_size(mesh, ba) == 0 else (
+        "data" if b % SH.axis_size(mesh, "data") == 0 else None)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(b_ax, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+    args = [p_struct, tok, pos, st_struct]
+    shs = [p_sh, tok_sh, pos_sh, st_sh]
+    if m.enc_segments is not None:
+        enc = jax.ShapeDtypeStruct((b, m.max_enc_len, m.d_model), dtype)
+        args.append(enc)
+        shs.append(NamedSharding(mesh, P(b_ax, None, None)))
+    return Case(f"{m.name}:{shape.name}", step, tuple(args), tuple(shs),
+                donate_argnums=(3,))

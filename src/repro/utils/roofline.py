@@ -1,0 +1,105 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e target).
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+cost_analysis() reports whole-program FLOPs/bytes (already per the full
+mesh program; XLA reports per-device numbers for SPMD modules), and the
+collective bytes come from the HLO parse (utils/hlo.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_LINK_BW = 50e9                # B/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    flops: float                  # HLO FLOPs (per device)
+    hbm_bytes: float              # HLO bytes accessed (per device)
+    coll_bytes: float             # collective bytes (per device)
+    chips: int
+    model_flops: float = 0.0      # 6*N*D useful FLOPs (whole step, global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time (s): overlapped model -> max of the terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / (chips * HLO_FLOPs): how much compiled compute is
+        useful (catches remat / redundancy waste)."""
+        if not self.model_flops:
+            return None
+        return self.model_flops / max(self.flops * self.chips, 1.0)
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Upper bound on MFU at the roofline step time."""
+        if not self.model_flops:
+            return None
+        return self.model_flops / (self.t_bound * self.chips * PEAK_FLOPS_BF16)
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "case": self.name,
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "bottleneck": self.bottleneck,
+            "useful_ratio": (round(self.useful_ratio, 4)
+                             if self.useful_ratio is not None else None),
+            "mfu_bound": (round(self.mfu_bound, 4)
+                          if self.mfu_bound is not None else None),
+        }
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    """6*N*D for one training step."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_forward(n_params_active: float, tokens: float) -> float:
+    return 2.0 * n_params_active * tokens
+
+
+def from_compiled(name: str, compiled, hlo_text: str, chips: int,
+                  model_flops: float = 0.0) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    Uses the loop-aware HLO cost model (utils/hlo_cost.py): XLA's own
+    ``cost_analysis()`` counts while-loop bodies once, which undercounts
+    scanned models (layers scan x microbatch scan) by orders of magnitude
+    — verified in tests/test_hlo_cost.py.
+    """
+    from repro.utils.hlo_cost import analyze
+    t = analyze(hlo_text)
+    return Roofline(name=name, flops=t["flops"], hbm_bytes=t["hbm_bytes"],
+                    coll_bytes=t["coll_bytes"], chips=chips,
+                    model_flops=model_flops)

@@ -1,0 +1,141 @@
+"""Algorithm-1 training-scheme invariants (the paper's §4 mechanism)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gan as G
+from repro.core.encoding import ConfigDim, ConfigSpace
+from repro.core.train import encode_batch, make_train_step, train_gan
+from repro.dataset.generator import generate_dataset
+from repro.design_models.base import DesignModel
+
+
+class ConstModel(DesignModel):
+    """Design model whose satisfaction is globally constant."""
+
+    name = "const"
+
+    def __init__(self, always_satisfy: bool):
+        self.always = always_satisfy
+        self.space = ConfigSpace(dims=(ConfigDim("a", (1., 2., 4., 8.)),
+                                       ConfigDim("b", (1., 2.))))
+        self.net_space = ConfigSpace(dims=(ConfigDim("n", (1., 2.)),))
+
+    def evaluate(self, net, config):
+        b = np.broadcast_shapes(net[..., 0].shape, config[..., 0].shape)
+        val = 0.5 if self.always else 2.0
+        return np.full(b, val), np.full(b, val)
+
+
+def _mini_cfg(model):
+    return G.GANConfig(n_net=1, w_critic=0.5).scaled(layers=1, neurons=16,
+                                                     batch_size=32, lr=1e-3)
+
+
+def _fake_ds(model, n=64):
+    return generate_dataset(model, n, seed=0)
+
+
+def test_all_satisfied_masks_config_loss():
+    """When every generated config satisfies (lines 10-12), Loss_config
+    contributes 0 and G is driven purely by the critic term."""
+    model = ConstModel(always_satisfy=True)
+    ds = _fake_ds(model)
+    # objectives = 1.0 > 0.5 model output -> always satisfied
+    ds.latency[:] = 1.0
+    ds.power[:] = 1.0
+    st = train_gan(model, ds, _mini_cfg(model), iters=1)
+    for h in st.history:
+        assert h["loss_config"] == pytest.approx(0.0, abs=1e-6)
+        assert h["sat_rate"] == pytest.approx(1.0)
+
+
+def test_none_satisfied_full_config_loss():
+    model = ConstModel(always_satisfy=False)
+    ds = _fake_ds(model)
+    ds.latency[:] = 1.0   # model returns 2.0 > 1.0 -> never satisfied
+    ds.power[:] = 1.0
+    st = train_gan(model, ds, _mini_cfg(model), iters=1)
+    for h in st.history:
+        assert h["loss_config"] > 0.0
+        assert h["sat_rate"] == pytest.approx(0.0)
+
+
+def test_design_model_is_out_of_gradient_path():
+    """The design model runs through pure_callback; its output enters
+    losses only as constants.  If a gradient ever flowed into it, the
+    callback (numpy code) would raise under trace."""
+    model = ConstModel(always_satisfy=False)
+    ds = _fake_ds(model)
+    st = train_gan(model, ds, _mini_cfg(model), iters=1)
+    leaves = jax.tree.leaves(st.g_params)
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves)
+
+
+def test_d_receives_stop_gradient_probs():
+    """During the D update the G output is stop_gradient-ed: updating D
+    must leave G params bit-identical (alternating updates, Alg. 1)."""
+    model = ConstModel(always_satisfy=False)
+    ds = _fake_ds(model)
+    cfg = _mini_cfg(model)
+    rng = jax.random.PRNGKey(0)
+    g_params = G.init_generator(jax.random.fold_in(rng, 1), cfg, model.space)
+    before = jax.tree.map(lambda a: np.asarray(a).copy(), g_params)
+    _, _, step = make_train_step(model, cfg)
+    # one full alternating step changes g_params through ITS OWN loss only;
+    # run with lr=0 for G by zeroing grads is implicit — instead verify
+    # numerically that D loss does not depend on g_params:
+    d_params = G.init_discriminator(jax.random.fold_in(rng, 2), cfg, model.space)
+    batch = {k: jnp.asarray(v) for k, v in
+             encode_batch(model, ds, np.arange(16)).items()}
+    noise = G.sample_noise(rng, 16, cfg)
+
+    def d_loss_of_g(gp):
+        probs = G.generator_apply(gp, model.space, batch["net_enc"],
+                                  batch["obj_enc"], noise)
+        probs = jax.lax.stop_gradient(probs)
+        logits = G.discriminator_apply(d_params, batch["net_enc"], probs,
+                                       batch["obj_enc"])
+        return jnp.mean(G.satisfaction_ce(logits, jnp.zeros(16)))
+
+    grads = jax.grad(d_loss_of_g)(g_params)
+    assert all(float(jnp.max(jnp.abs(g))) == 0.0 for g in jax.tree.leaves(grads))
+
+
+def test_critic_gradient_flows_through_frozen_d():
+    """G's critic gradient must be nonzero (it flows THROUGH D into G)."""
+    model = ConstModel(always_satisfy=False)
+    cfg = _mini_cfg(model)
+    ds = _fake_ds(model)
+    rng = jax.random.PRNGKey(0)
+    g_params = G.init_generator(jax.random.fold_in(rng, 1), cfg, model.space)
+    d_params = G.init_discriminator(jax.random.fold_in(rng, 2), cfg, model.space)
+    batch = {k: jnp.asarray(v) for k, v in
+             encode_batch(model, ds, np.arange(16)).items()}
+    noise = G.sample_noise(rng, 16, cfg)
+
+    def critic_loss(gp):
+        probs = G.generator_apply(gp, model.space, batch["net_enc"],
+                                  batch["obj_enc"], noise)
+        logits = G.discriminator_apply(d_params, batch["net_enc"], probs,
+                                       batch["obj_enc"])
+        return jnp.mean(G.satisfaction_ce(logits, jnp.ones(16)))
+
+    grads = jax.grad(critic_loss)(g_params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert gnorm > 0.0
+
+
+def test_architecture_patterns():
+    """Structural checks of the heterogeneous layer patterns."""
+    from repro import configs
+    g = configs.get_arch("gemma3-1b")
+    assert [s.repeats for s in g.segments] == [4, 2]
+    assert [sp.cfg.window for sp in g.segments[0].pattern] == [1024] * 5 + [None]
+    x = configs.get_arch("xlstm-1.3b")
+    kinds = [sp.kind for sp in x.segments[0].pattern]
+    assert kinds == ["mlstm"] * 7 + ["slstm"] and x.segments[0].repeats == 6
+    h = configs.get_arch("hymba-1.5b")
+    assert [s.n_layers for s in h.segments] == [1, 14, 1, 15, 1]
+    assert all(sp.cfg.ssm_state == 16 for s in h.segments for sp in s.pattern)

@@ -1,0 +1,125 @@
+"""Design-model invariants (property-based).
+
+The paper's models are calibrated against RTL simulation; ours are stated
+analytic constants, so the tests check *physics-shaped* invariants rather
+than absolute numbers.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.design_models.dnnweaver import DnnWeaverModel
+from repro.design_models.im2col import Im2colModel
+from repro.design_models.tpu_mesh import TpuMeshModel
+
+
+@pytest.fixture(scope="module")
+def im2col():
+    return Im2colModel()
+
+
+@pytest.fixture(scope="module")
+def dnnw():
+    return DnnWeaverModel()
+
+
+def _sample(model, seed, n=64):
+    rng = np.random.default_rng(seed)
+    return (model.net_space.sample_indices(rng, n),
+            model.space.sample_indices(rng, n))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_im2col_more_pes_never_slower(seed):
+    model = Im2colModel()
+    net_idx, cfg_idx = _sample(model, seed)
+    lo = cfg_idx.copy()
+    hi = cfg_idx.copy()
+    lo[:, 0] = 0                       # min PEN
+    hi[:, 0] = model.space.dims[0].n - 1  # max PEN
+    lat_lo, _ = model.evaluate_indices(net_idx, lo)
+    lat_hi, _ = model.evaluate_indices(net_idx, hi)
+    ok = np.isfinite(lat_lo) & np.isfinite(lat_hi)
+    assert np.all(lat_hi[ok] <= lat_lo[ok] * (1 + 1e-9))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_im2col_more_sram_more_static_power_when_feasible(seed):
+    model = Im2colModel()
+    net_idx, cfg_idx = _sample(model, seed)
+    lo = cfg_idx.copy(); hi = cfg_idx.copy()
+    for d in (3, 4, 5):                # ISS, WSS, OSS
+        lo[:, d] = np.minimum(lo[:, d], hi[:, d])
+        hi[:, d] = model.space.dims[d].n - 1
+    lat_lo, p_lo = model.evaluate_indices(net_idx, lo)
+    lat_hi, p_hi = model.evaluate_indices(net_idx, hi)
+    # same latency rows (tiling unchanged): bigger SRAM costs static power
+    ok = np.isfinite(p_lo) & np.isfinite(p_hi) & np.isclose(lat_lo, lat_hi)
+    assert np.all(p_hi[ok] >= p_lo[ok] - 1e-9)
+
+
+def test_im2col_feasibility_infeasible_tile_is_inf(im2col):
+    """A tile bigger than every SRAM must be rejected."""
+    net = np.array([[256., 256., 64., 64., 5., 5.]])
+    cfg = np.array([[4096., 512., 512., 256., 256., 256.,
+                     128., 128., 256., 256., 5., 5.]])
+    lat, p = im2col.evaluate(net, cfg)
+    assert np.isinf(lat[0]) and np.isinf(p[0])
+
+
+def test_dnnweaver_derived_tiles_always_fit(dnnw):
+    rng = np.random.default_rng(0)
+    net_idx = dnnw.net_space.sample_indices(rng, 256)
+    cfg_idx = dnnw.space.sample_indices(rng, 256)
+    net = dnnw.net_space.values_from_indices(net_idx)
+    cfg = dnnw.space.values_from_indices(cfg_idx)
+    pen, iss, wss, oss = (cfg[..., i] for i in range(4))
+    tic, toc, tow, toh, tkw, tkh = dnnw._derive_tiles(net, iss, wss, oss)
+    kw, kh = net[..., 4], net[..., 5]
+    assert np.all(tic * tkw * tkh * tow * toh <= iss * (1 + 1e-9))
+    assert np.all(toc * tow * toh <= oss * (1 + 1e-9))
+
+
+def test_bigger_network_never_faster(im2col):
+    """Scaling every net dim up cannot reduce latency at a fixed config."""
+    rng = np.random.default_rng(3)
+    cfg_idx = im2col.space.sample_indices(rng, 128)
+    small = np.zeros((128, 6), np.int64)
+    big = np.stack([np.full(128, d.n - 1) for d in im2col.net_space.dims], -1)
+    lat_s, _ = im2col.evaluate_indices(small, cfg_idx)
+    lat_b, _ = im2col.evaluate_indices(big, cfg_idx)
+    ok = np.isfinite(lat_s) & np.isfinite(lat_b)
+    assert np.all(lat_b[ok] >= lat_s[ok])
+
+
+# ---------------------------------------------------------------------------
+# TPU-mesh model (beyond-paper)
+# ---------------------------------------------------------------------------
+def test_tpu_mesh_more_chips_not_slower_when_feasible():
+    model = TpuMeshModel()
+    net = np.array([[24., 2048., 4., 4096., 256., 65536.]])
+    base = np.array([[1., 8., 4., 4., 1., 2., 1.]])     # 32 chips
+    wide = np.array([[1., 16., 4., 4., 1., 2., 1.]])    # 64 chips
+    lat_b, pow_b = model.evaluate(net, base)
+    lat_w, pow_w = model.evaluate(net, wide)
+    assert lat_w[0] <= lat_b[0] * (1 + 1e-9)
+
+
+def test_tpu_mesh_infeasible_hbm_is_inf():
+    model = TpuMeshModel()
+    net = np.array([[64., 7168., 5., 32768., 512., 262144.]])   # ~20B params
+    tiny = np.array([[1., 1., 1., 1., 0., 4., 1.]])             # 1 chip
+    lat, p = model.evaluate(net, tiny)
+    assert np.isinf(lat[0])
+
+
+def test_tpu_mesh_compression_helps_multipod_collective():
+    model = TpuMeshModel()
+    net = np.array([[48., 4096., 4., 4096., 512., 131072.]])
+    nocomp = np.array([[2., 16., 16., 1., 1., 2., 1.]])
+    comp = np.array([[2., 16., 16., 1., 1., 2., 4.]])
+    lat_n, _ = model.evaluate(net, nocomp)
+    lat_c, _ = model.evaluate(net, comp)
+    assert lat_c[0] <= lat_n[0] * (1 + 1e-9)

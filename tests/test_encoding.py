@@ -1,0 +1,56 @@
+"""ConfigSpace encoding properties (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import ConfigDim, ConfigSpace, Normalizer
+
+
+def space_strategy():
+    dim = st.builds(
+        lambda n, c: ConfigDim(name=f"d{n}", choices=tuple(sorted(set(c)))),
+        st.integers(0, 99),
+        st.lists(st.floats(1.0, 1e6, allow_nan=False), min_size=2, max_size=8,
+                 unique=True),
+    )
+    return st.builds(lambda ds: ConfigSpace(dims=tuple(ds)),
+                     st.lists(dim, min_size=1, max_size=6))
+
+
+@given(space_strategy(), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_onehot_roundtrip(space, seed):
+    rng = np.random.default_rng(seed)
+    idx = space.sample_indices(rng, 16)
+    oh = space.onehot_from_indices(idx)
+    assert oh.shape == (16, space.onehot_width)
+    np.testing.assert_array_equal(space.indices_from_onehot(oh), idx)
+    # per-group rows sum to 1 exactly
+    off = 0
+    for d in space.dims:
+        np.testing.assert_allclose(oh[:, off:off + d.n].sum(-1), 1.0)
+        off += d.n
+
+
+@given(space_strategy(), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_value_roundtrip(space, seed):
+    rng = np.random.default_rng(seed)
+    idx = space.sample_indices(rng, 8)
+    vals = space.values_from_indices(idx)
+    np.testing.assert_array_equal(space.indices_from_values(vals), idx)
+
+
+@given(st.lists(st.floats(-1e6, 1e6, allow_nan=False), min_size=4,
+                max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_normalizer_inverse(xs):
+    x = np.asarray(xs)[:, None]
+    nm = Normalizer.fit(x, center=True)
+    np.testing.assert_allclose(nm.inverse(nm(x)), x, rtol=1e-9, atol=1e-6)
+
+
+def test_soft_onehot_argmax():
+    space = ConfigSpace(dims=(ConfigDim("a", (1., 2., 4.)),
+                              ConfigDim("b", (8., 16.))))
+    soft = np.array([[0.1, 0.7, 0.2, 0.4, 0.6]])
+    np.testing.assert_array_equal(space.indices_from_onehot(soft), [[1, 1]])

@@ -1,0 +1,61 @@
+"""Candidate enumeration (probability threshold) properties — §6.1."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import ConfigDim, ConfigSpace
+from repro.core.explorer import enumerate_candidates
+
+
+def _space(sizes):
+    return ConfigSpace(dims=tuple(
+        ConfigDim(f"d{i}", tuple(float(j) for j in range(n)))
+        for i, n in enumerate(sizes)))
+
+
+def _probs(space, seed):
+    rng = np.random.default_rng(seed)
+    parts = []
+    for d in space.dims:
+        p = rng.dirichlet(np.ones(d.n))
+        parts.append(p)
+    return np.concatenate(parts)
+
+
+@given(st.lists(st.integers(2, 6), min_size=1, max_size=5),
+       st.integers(0, 10_000), st.floats(0.05, 0.9))
+@settings(max_examples=50, deadline=None)
+def test_candidates_are_cartesian_product_of_employed(sizes, seed, thresh):
+    space = _space(sizes)
+    probs = _probs(space, seed)
+    cands = enumerate_candidates(space, probs, thresh, max_candidates=10_000)
+    groups = space.split_groups(probs)
+    expected = 1
+    for g in groups:
+        expected *= max(int(np.sum(g > thresh)), 1)
+    assert cands.shape == (expected, space.n_dims)
+    # argmax choice always present
+    argmax = np.array([int(np.argmax(g)) for g in groups])
+    assert any(np.array_equal(c, argmax) for c in cands)
+
+
+@given(st.lists(st.integers(2, 8), min_size=2, max_size=6),
+       st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_candidate_cap_respected_and_keeps_argmax(sizes, seed):
+    space = _space(sizes)
+    probs = _probs(space, seed)
+    cap = 16
+    cands = enumerate_candidates(space, probs, 0.01, max_candidates=cap)
+    assert 1 <= cands.shape[0] <= cap
+    groups = space.split_groups(probs)
+    argmax = np.array([int(np.argmax(g)) for g in groups])
+    assert any(np.array_equal(c, argmax) for c in cands)
+
+
+def test_example_from_paper():
+    """PE in {4, 16}, SRAM in {2KB, 8KB} above threshold -> 4 candidates."""
+    space = _space([4, 4])
+    probs = np.array([0.3, 0.3, 0.2, 0.2,     # two above 0.25
+                      0.35, 0.05, 0.35, 0.25])
+    cands = enumerate_candidates(space, probs, 0.25, 100)
+    assert cands.shape[0] == 2 * 2

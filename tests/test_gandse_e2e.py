@@ -1,0 +1,86 @@
+"""End-to-end GANDSE behaviour (reduced scale): the paper's qualitative
+claims hold directionally — see benchmarks/ + EXPERIMENTS.md for the
+full-scale reproduction runs."""
+import numpy as np
+import pytest
+
+from repro.core.dse_api import GANDSE, parse_network, summarize
+from repro.core.gan import GANConfig
+from repro.dataset.generator import generate_dataset, generate_tasks
+from repro.design_models.dnnweaver import DnnWeaverModel
+
+
+@pytest.fixture(scope="module")
+def trained():
+    model = DnnWeaverModel()
+    cfg = GANConfig(n_net=model.net_space.n_dims, w_critic=1.0).scaled(
+        layers=2, neurons=128, batch_size=256, lr=1e-4)
+    g = GANDSE(model, cfg)
+    g.train(n_data=3000, iters=4, seed=0)
+    return g
+
+
+def test_training_history_recorded(trained):
+    h = trained.state.history
+    assert len(h) > 0
+    for key in ("loss_g", "loss_d", "loss_config", "loss_critic", "sat_rate"):
+        assert key in h[-1]
+        assert np.isfinite(h[-1][key])
+
+
+def test_explore_satisfies_generous_objectives(trained):
+    """With 2-3x slack most tasks must be satisfied after short training."""
+    tasks = generate_tasks(trained.model, 40, seed=5, slack=(2.0, 3.0))
+    res = trained.explore_tasks(tasks)
+    s = summarize(res)
+    assert s["n_satisfied"] >= 0.6 * s["n_tasks"]
+    assert s["dse_time_s"] < 2.0               # negligible-DSE-time claim
+
+
+def test_emit_config_is_legal(trained):
+    tasks = generate_tasks(trained.model, 10, seed=7, slack=(2.0, 3.0))
+    res = [r for r in trained.explore_tasks(tasks) if r.satisfied]
+    assert res
+    art = trained.emit_config(res[0])
+    space = trained.model.space
+    for dim in space.dims:
+        assert art["config"][dim.name] in dim.choices
+    assert art["satisfied"]
+
+
+def test_parse_network_snaps_to_legal_values(trained):
+    net = parse_network({"IC": 60, "OC": 33, "OW": 30, "OH": 31,
+                         "KW": 3, "KH": 3}, trained.model)
+    vals = trained.model.net_space.values_from_indices(net[None])[0]
+    assert vals[0] == 64 and vals[1] == 32     # nearest legal
+    assert vals[4] == 3
+
+
+def test_selector_never_worsens_generator_argmax(trained):
+    """Algorithm 2 over the candidate set is at least as good as taking
+    G's argmax config alone (the candidates include the argmax)."""
+    from repro.core.explorer import enumerate_candidates
+    from repro.core.selector import select
+    tasks = generate_tasks(trained.model, 8, seed=11, slack=(1.2, 2.0))
+    for i in range(8):
+        net = tasks.net_idx[i]
+        lo, po = tasks.lat_obj[i], tasks.pow_obj[i]
+        probs = trained._explorer.generator_probs(net, lo, po)[0]
+        cands = enumerate_candidates(trained.model.space, probs, 0.2, 4096)
+        sel = select(trained.model, net, cands, lo, po)
+        argmax = trained.model.space.indices_from_onehot(probs[None])[0]
+        la, pa = trained.model.evaluate_indices(net[None], argmax[None])
+        argmax_sat = bool(np.isfinite(la[0]) and la[0] <= lo and pa[0] <= po)
+        if argmax_sat:
+            assert sel.satisfied
+
+
+def test_dataset_objectives_are_witnessed():
+    """Every dataset row's (L, P) is achieved by its own config — the
+    (objective, witness) pairing used for training."""
+    model = DnnWeaverModel()
+    ds = generate_dataset(model, 500, seed=3)
+    lat, pw = model.evaluate_indices(ds.net_idx, ds.cfg_idx)
+    np.testing.assert_allclose(lat, ds.latency, rtol=1e-12)
+    np.testing.assert_allclose(pw, ds.power, rtol=1e-12)
+    assert np.isfinite(ds.latency).all()

@@ -1,0 +1,116 @@
+"""Per-kernel validation: Pallas interpret mode vs the pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention as FA
+from repro.kernels import fused_mlp as FM
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# fused dense
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [
+    (128, 256, 512),      # aligned
+    (256, 1024, 768),     # multi-block K
+    (100, 36, 50),        # odd (falls back to whole-dim blocks)
+    (1, 8, 16),           # degenerate
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("relu", [True, False])
+def test_fused_dense_matches_ref(m, k, n, dtype, relu, rng):
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, dtype)
+    b = jnp.asarray(rng.normal(size=(n,)), dtype)
+    got = FM.fused_dense(x, w, b, relu=relu, interpret=True)
+    want = ref.fused_dense_relu(x, w, b) if relu else ref.fused_dense(x, w, b)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_fused_dense_block_shapes(rng):
+    """Different BlockSpec tilings give identical results."""
+    x = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(512, 256)) * 0.05, jnp.float32)
+    b = jnp.zeros((256,), jnp.float32)
+    ys = [FM.fused_dense(x, w, b, bm=bm, bk=bk, bn=bn, interpret=True)
+          for bm, bk, bn in [(64, 128, 64), (256, 512, 256), (128, 256, 128)]]
+    for y in ys[1:]:
+        # different K-split accumulation orders: bitwise inequality expected
+        np.testing.assert_allclose(np.asarray(ys[0]), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("h,hkv", [(4, 4), (8, 2), (4, 1)])
+@pytest.mark.parametrize("causal,window", [
+    (True, None), (True, 64), (False, None),
+])
+def test_flash_attention_matches_ref(h, hkv, causal, window, rng):
+    b, s, d = 2, 256, 32
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    got = FA.flash_attention(q, k, v, causal=causal, window=window,
+                             bq=64, bk=64, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4), (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, tol, rng):
+    b, h, hkv, s, d = 1, 4, 2, 128, 64
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    got = FA.flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_q_offset(rng):
+    """Chunked prefill: attending with q_offset equals the full pass."""
+    b, h, hkv, s, d = 1, 4, 2, 128, 32
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    full = FA.flash_attention(q, k, v, bq=32, bk=32, interpret=True)
+    part = FA.flash_attention(q[:, :, 64:], k, v, q_offset=64,
+                              bq=32, bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(part), np.asarray(full[:, :, 64:]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_xla_fallback_matches_pallas(rng):
+    """ops.py dispatching: XLA fallback == Pallas interpret numerics."""
+    b, h, hkv, s, d = 1, 4, 2, 128, 32
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    a = ops.flash_attention(q, k, v, interpret=True)
+    bb = ops.flash_attention(q, k, v, interpret=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=2e-4, atol=2e-4)
+
+
+def test_blocked_xla_attention_matches_reference(rng):
+    """nn/attention.py blocked online-softmax path vs unblocked reference."""
+    from repro.nn import attention as A
+    b, s, h, hkv, d = 2, 512, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    for window in (None, 128):
+        got = A.flash_attention_xla(q, k, v, causal=True, window=window,
+                                    q_block=128, kv_block=128)
+        want = A.attention_reference(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,84 @@
+"""Algorithm 2 (design selector) properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import ConfigDim, ConfigSpace
+from repro.core.selector import select
+from repro.design_models.base import DesignModel
+
+
+class TableModel(DesignModel):
+    """Lookup design model: candidate index i -> (lat[i], pow[i])."""
+
+    name = "table"
+
+    def __init__(self, lat, pw):
+        self.lat = np.asarray(lat, np.float64)
+        self.pw = np.asarray(pw, np.float64)
+        self.space = ConfigSpace(dims=(
+            ConfigDim("i", tuple(float(i) for i in range(len(self.lat)))),))
+        self.net_space = ConfigSpace(dims=(ConfigDim("n", (0.0, 1.0)),))
+
+    def evaluate(self, net, config):
+        i = config[..., 0].astype(int)
+        return self.lat[i], self.pw[i]
+
+
+def run(lat, pw, lo, po):
+    model = TableModel(lat, pw)
+    cands = np.arange(len(lat), dtype=np.int32)[:, None]
+    return select(model, np.array([0]), cands, lo, po)
+
+
+@given(st.lists(st.tuples(st.floats(0.1, 10), st.floats(0.1, 10)),
+                min_size=1, max_size=40),
+       st.floats(0.2, 8), st.floats(0.2, 8))
+@settings(max_examples=60, deadline=None)
+def test_selector_finds_satisfying_when_exists(pairs, lo, po):
+    lat = [p[0] for p in pairs]
+    pw = [p[1] for p in pairs]
+    sel = run(lat, pw, lo, po)
+    exists = any(l <= lo and p <= po for l, p in pairs)
+    if exists:
+        # Algorithm 2's scenario rules guarantee a satisfied final pick
+        assert sel.satisfied
+        assert sel.latency <= lo * 1.01 and sel.power <= po * 1.01
+
+
+@given(st.lists(st.tuples(st.floats(0.1, 10), st.floats(0.1, 10)),
+                min_size=1, max_size=40),
+       st.floats(0.2, 8), st.floats(0.2, 8))
+@settings(max_examples=60, deadline=None)
+def test_selector_result_is_a_candidate(pairs, lo, po):
+    lat = [p[0] for p in pairs]
+    pw = [p[1] for p in pairs]
+    sel = run(lat, pw, lo, po)
+    assert sel.cfg_idx is not None
+    i = int(sel.cfg_idx[0])
+    assert np.isclose(lat[i], sel.latency) and np.isclose(pw[i], sel.power)
+
+
+def test_selector_prefers_dominating_improvement():
+    # both satisfied: only a strictly-better-on-both candidate replaces
+    sel = run([0.9, 0.8, 0.85], [0.9, 0.8, 0.95], 1.0, 1.0)
+    assert sel.latency == 0.8 and sel.power == 0.8
+
+
+def test_selector_priority_satisfy_first():
+    # candidate 0 unsat (lat 2.0), candidate 1 brings latency under LO while
+    # staying under PO -> scenario 2 forces the update
+    sel = run([2.0, 0.9], [0.5, 0.8], 1.0, 1.0)
+    assert sel.satisfied and sel.latency == 0.9
+
+
+def test_selector_empty_candidates():
+    model = TableModel([1.0], [1.0])
+    sel = select(model, np.array([0]), np.zeros((0, 1), np.int32), 1.0, 1.0)
+    assert not sel.satisfied and sel.n_candidates == 0
+
+
+def test_improvement_ratio_formula():
+    sel = run([0.5], [0.5], 1.0, 1.0)
+    # sqrt(1/2 (0.25 + 0.25)) = 0.5
+    assert abs(sel.improvement_ratio(1.0, 1.0) - 0.5) < 1e-12
