@@ -100,6 +100,19 @@ class ConfigSpace:
             [rng.integers(0, d.n, size=n) for d in self.dims], axis=-1
         )
 
+    def values_from_indices_jax(self, idx) -> jnp.ndarray:
+        """jnp twin of `values_from_indices`: traceable constant-table gather.
+
+        idx: (..., n_dims) integer choice indices -> (..., n_dims) float32
+        values.  The choice tables are baked into the jaxpr as constants so
+        design-model oracles built on this stay device-resident.
+        """
+        cols = [
+            jnp.take(jnp.asarray(d.choices, jnp.float32), idx[..., i], axis=0)
+            for i, d in enumerate(self.dims)
+        ]
+        return jnp.stack(cols, axis=-1)
+
 
 @dataclasses.dataclass(frozen=True)
 class Normalizer:

@@ -13,6 +13,7 @@ behaviour for realistic thresholds while bounding memory.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from typing import List, Optional, Tuple
 
@@ -93,10 +94,18 @@ class Explorer:
 
     def __post_init__(self):
         space = self.model.space
+        gan_cfg = self.gan_cfg
 
-        @jax.jit
-        def fwd(g_params, net_enc, obj_enc, noise):
-            return G.generator_apply(g_params, space, net_enc, obj_enc, noise)
+        @functools.partial(jax.jit, static_argnames="n_samples")
+        def fwd(g_params, net_enc, obj_enc, rng, n_samples):
+            # all noise draws in one dispatch: vmap over folded keys, then
+            # average — the whole G inference stays device-resident.
+            def one(i):
+                noise = G.sample_noise(jax.random.fold_in(rng, i),
+                                       net_enc.shape[0], gan_cfg)
+                return G.generator_apply(g_params, space, net_enc, obj_enc, noise)
+
+            return jnp.mean(jax.vmap(one)(jnp.arange(n_samples)), axis=0)
 
         self._fwd = fwd
 
@@ -105,12 +114,10 @@ class Explorer:
         net_enc = self.ds.net_encoded(self.model, np.atleast_2d(net_idx))
         obj_enc = self.ds.obj_encoded(np.atleast_1d(lat_obj), np.atleast_1d(pow_obj))
         rng = jax.random.PRNGKey(seed)
-        acc = None
-        for i in range(self.cfg.noise_samples):
-            noise = G.sample_noise(jax.random.fold_in(rng, i), net_enc.shape[0], self.gan_cfg)
-            p = self._fwd(self.g_params, jnp.asarray(net_enc), jnp.asarray(obj_enc), noise)
-            acc = p if acc is None else acc + p
-        return np.asarray(acc) / self.cfg.noise_samples
+        return np.asarray(
+            self._fwd(self.g_params, jnp.asarray(net_enc), jnp.asarray(obj_enc),
+                      rng, n_samples=self.cfg.noise_samples)
+        )
 
     def candidates(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
                    seed: int = 0) -> np.ndarray:

@@ -11,13 +11,43 @@ Both are multilayer perceptrons with ReLU activations and Adam optimizers
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.encoding import ConfigSpace
 from repro.nn import layers as L
+
+
+@functools.lru_cache(maxsize=None)
+def _padded_layout(space: ConfigSpace):
+    """Constant index maps for vectorized per-group ops.
+
+    Groups have ragged sizes; padding them to (n_dims, max_n) lets the
+    per-group softmax/argmax run as ONE wide op instead of a slice/concat
+    chain per group (which costs a long tail of small kernels per step).
+    Returns (gather_idx (n_dims, max_n), mask, flat_scatter (onehot_width,)):
+    ``flat[..., gather_idx]`` -> padded view; ``padded.reshape(..., -1)
+    [..., flat_scatter]`` -> flat view.  Plain numpy outputs: they embed as
+    jaxpr constants (device arrays here would leak tracers through the
+    cache when first built under a trace).
+    """
+    sizes = space.group_sizes
+    mx = max(sizes)
+    gidx = np.zeros((len(sizes), mx), np.int32)
+    mask = np.zeros((len(sizes), mx), bool)
+    flat2pad = np.zeros(space.onehot_width, np.int32)
+    off = 0
+    for g, n in enumerate(sizes):
+        for j in range(n):
+            gidx[g, j] = off + j
+            mask[g, j] = True
+            flat2pad[off + j] = g * mx + j
+        off += n
+    return gidx, mask, flat2pad
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,8 +96,10 @@ def generator_apply(params, space: ConfigSpace, net_enc, obj_enc, noise,
     """Returns (B, onehot_width) per-group softmax probabilities."""
     x = jnp.concatenate([net_enc, obj_enc, noise], axis=-1)
     logits = L.mlp_apply(params, x, use_fused=use_fused)
-    probs = [jax.nn.softmax(g, axis=-1) for g in space.split_groups(logits)]
-    return jnp.concatenate(probs, axis=-1)
+    gidx, mask, flat2pad = _padded_layout(space)
+    padded = jnp.where(mask, logits[..., gidx], -jnp.inf)
+    probs = jax.nn.softmax(padded, axis=-1)      # pad -inf -> exactly 0
+    return probs.reshape(*probs.shape[:-2], -1)[..., flat2pad]
 
 
 def discriminator_apply(params, net_enc, cfg_onehot, obj_enc,
@@ -86,12 +118,14 @@ def sample_noise(rng, batch: int, cfg: GANConfig):
 # ---------------------------------------------------------------------------
 def grouped_cross_entropy(space: ConfigSpace, target_onehot, probs) -> jnp.ndarray:
     """E(Config_s, Config_g): summed per-group CE between the dataset
-    config (one-hot) and G's per-group distributions.  (B,)"""
+    config (one-hot) and G's per-group distributions.  (B,)
+
+    Because the target is one-hot within each group, the sum of per-group
+    CEs equals a single sum over the whole one-hot width — one wide op
+    instead of a per-group slice/log/reduce chain (cheaper fwd and bwd).
+    """
     eps = 1e-9
-    out = 0.0
-    for tg, pg in zip(space.split_groups(target_onehot), space.split_groups(probs)):
-        out = out - jnp.sum(tg * jnp.log(pg + eps), axis=-1)
-    return out
+    return -jnp.sum(target_onehot * jnp.log(probs + eps), axis=-1)
 
 
 def satisfaction_ce(logits, sat_true: jnp.ndarray) -> jnp.ndarray:
@@ -103,8 +137,9 @@ def satisfaction_ce(logits, sat_true: jnp.ndarray) -> jnp.ndarray:
 
 def decode_hard(space: ConfigSpace, probs):
     """Per-group argmax -> (B, n_dims) int32 choice indices (jnp)."""
-    idx = [jnp.argmax(g, axis=-1) for g in space.split_groups(probs)]
-    return jnp.stack(idx, axis=-1).astype(jnp.int32)
+    gidx, mask, _ = _padded_layout(space)
+    padded = jnp.where(mask, probs[..., gidx], -jnp.inf)
+    return jnp.argmax(padded, axis=-1).astype(jnp.int32)
 
 
 def indices_to_values(space: ConfigSpace, idx):

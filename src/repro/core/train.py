@@ -12,17 +12,33 @@ For each sample s of a batch:
     update G with Loss_config + w_critic * Loss_critic
     update D with Loss_dis
 
-The design model is called through ``jax.pure_callback`` — it is an
-*external, non-differentiable* oracle exactly as in the paper (Fig. 3(c)):
-its output enters the losses only as constants (labels / masks), never in
-the gradient path.  G's gradients flow through D (frozen) for the critic
-term and through the per-group CE for the config term.
+The design model is an *external, non-differentiable* oracle exactly as in
+the paper (Fig. 3(c)): its output enters the losses only as constants
+(labels / masks), never in the gradient path.  G's gradients flow through
+D (frozen) for the critic term and through the per-group CE for the config
+term.
+
+Two oracle routes exist:
+
+- **fused** (default for the built-in models): the design model's pure-jnp
+  twin ``DesignModel.evaluate_jax`` is traced straight into the jitted
+  step under ``stop_gradient`` — no host round-trip, so a whole epoch runs
+  as one ``jax.lax.scan`` over device-resident batches.
+- **callback** (fallback for models without a jnp port, e.g. external RTL
+  simulators): ``jax.pure_callback`` to the host numpy ``evaluate``, as in
+  the original implementation.
+
+``train_gan`` pre-encodes the dataset once, uploads it once, and runs each
+epoch as a single jitted scan with the (params, opt-state, rng) carry
+donated — the Python interpreter touches the hot path once per epoch, not
+once per batch.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -52,29 +68,77 @@ def _design_model_callback(model: DesignModel):
     def eval_np(cfg_idx, net_idx):
         lat, pw = model.evaluate_indices(np.asarray(net_idx), np.asarray(cfg_idx))
         big = np.float32(3.4e38)
-        lat = np.nan_to_num(lat.astype(np.float32), posinf=big)
-        pw = np.nan_to_num(pw.astype(np.float32), posinf=big)
+        # NaN (a broken oracle formula) counts as infeasible, not as 0.0
+        # "satisfies everything" — mirrored by the fused route.
+        lat = np.nan_to_num(lat.astype(np.float32), nan=big, posinf=big)
+        pw = np.nan_to_num(pw.astype(np.float32), nan=big, posinf=big)
         return lat, pw
 
     return eval_np
 
 
-def make_train_step(model: DesignModel, cfg: G.GANConfig):
-    """Build the jitted per-batch update implementing Algorithm 1."""
+def make_oracle(model: DesignModel, use_jax_oracle: Optional[bool] = None):
+    """Build the in-step oracle: (cfg_idx, net_idx) -> (lat, pw) float32.
+
+    use_jax_oracle: True forces the fused jnp route (raises if the model has
+    no ``evaluate_jax``), False forces the host-callback route, None picks
+    the fused route whenever the model provides it.  Returns (fn, fused).
+    Infinite and NaN metrics are clamped to float32-max (i.e. treated as
+    infeasible) so downstream comparisons against objectives stay
+    well-defined and identical on both routes.
+    """
+    if use_jax_oracle is None:
+        use_jax_oracle = model.has_jax_oracle
+    if use_jax_oracle:
+        if not model.has_jax_oracle:
+            raise ValueError(f"model {model.name!r} has no jnp oracle")
+        big = jnp.float32(3.4e38)
+
+        def fused(cfg_idx, net_idx):
+            lat, pw = model.evaluate_jax_indices(net_idx, cfg_idx)
+            lat = jnp.nan_to_num(lat.astype(jnp.float32), nan=big, posinf=big)
+            pw = jnp.nan_to_num(pw.astype(jnp.float32), nan=big, posinf=big)
+            # Pin the oracle outputs as materialized buffers via an explicit
+            # gather: XLA CPU's instruction fusion otherwise duplicates the
+            # whole elementwise oracle chain into every consumer fusion —
+            # in grad programs that re-evaluates the oracle once per
+            # (row, one-hot column) of the CE backward and doubles the step
+            # time.  Gathers are never re-fused, so this is a cheap barrier.
+            iota = jnp.arange(lat.shape[0])
+            return lat[iota], pw[iota]
+
+        return fused, True
+
+    host = _design_model_callback(model)
+
+    def callback(cfg_idx, net_idx):
+        out_spec = (
+            jax.ShapeDtypeStruct((cfg_idx.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((cfg_idx.shape[0],), jnp.float32),
+        )
+        return jax.pure_callback(
+            host, out_spec, cfg_idx, net_idx, vmap_method="sequential"
+        )
+
+    return callback, False
+
+
+def _make_step_body(model: DesignModel, cfg: G.GANConfig,
+                    use_jax_oracle: Optional[bool] = None):
+    """The un-jitted Algorithm 1 update as a scan body over batches.
+
+    Returns (g_optim, d_optim, step_body) where
+    step_body(carry, batch) -> (carry, metrics) and
+    carry = (g_params, d_params, g_opt, d_opt, rng).
+    """
     space = model.space
-    oracle = _design_model_callback(model)
+    oracle, _ = make_oracle(model, use_jax_oracle)
 
     def losses_g(g_params, d_params, batch, noise):
         probs = G.generator_apply(g_params, space, batch["net_enc"], batch["obj_enc"], noise)
         # --- external design model on the hard-decoded config (lines 7-8)
         cfg_idx = G.decode_hard(space, probs)
-        out_spec = (
-            jax.ShapeDtypeStruct((cfg_idx.shape[0],), jnp.float32),
-            jax.ShapeDtypeStruct((cfg_idx.shape[0],), jnp.float32),
-        )
-        lat_g, pow_g = jax.pure_callback(
-            oracle, out_spec, cfg_idx, batch["net_idx"], vmap_method="sequential"
-        )
+        lat_g, pow_g = oracle(cfg_idx, batch["net_idx"])
         sat_actual = ((lat_g <= batch["lat_obj"]) & (pow_g <= batch["pow_obj"])).astype(jnp.float32)
         sat_actual = jax.lax.stop_gradient(sat_actual)
 
@@ -102,8 +166,8 @@ def make_train_step(model: DesignModel, cfg: G.GANConfig):
     g_optim = adam(cfg.g_lr)
     d_optim = adam(cfg.d_lr)
 
-    @jax.jit
-    def step(g_params, d_params, g_opt, d_opt, batch, rng):
+    def step_body(carry, batch):
+        g_params, d_params, g_opt, d_opt, rng = carry
         rng, nrng = jax.random.split(rng)
         noise = G.sample_noise(nrng, batch["net_enc"].shape[0], cfg)
         (loss_g, aux), g_grads = jax.value_and_grad(losses_g, has_aux=True)(
@@ -123,9 +187,48 @@ def make_train_step(model: DesignModel, cfg: G.GANConfig):
             loss_config=aux["loss_config"], loss_critic=aux["loss_critic"],
             sat_rate=aux["sat_rate"], d_acc=daux["d_acc"],
         )
+        return (g_params, d_params, g_opt, d_opt, rng), metrics
+
+    return g_optim, d_optim, step_body
+
+
+def make_train_step(model: DesignModel, cfg: G.GANConfig,
+                    use_jax_oracle: Optional[bool] = None):
+    """Build the jitted per-batch update implementing Algorithm 1.
+
+    Kept as the single-batch entry point (benchmarks, tests); the epoch
+    loop in ``train_gan`` scans the same body via ``make_epoch_fn``.
+    """
+    g_optim, d_optim, step_body = _make_step_body(model, cfg, use_jax_oracle)
+
+    @jax.jit
+    def step(g_params, d_params, g_opt, d_opt, batch, rng):
+        carry, metrics = step_body((g_params, d_params, g_opt, d_opt, rng), batch)
+        g_params, d_params, g_opt, d_opt, rng = carry
         return g_params, d_params, g_opt, d_opt, rng, metrics
 
     return g_optim, d_optim, step
+
+
+def make_epoch_fn(model: DesignModel, cfg: G.GANConfig,
+                  use_jax_oracle: Optional[bool] = None):
+    """Whole-epoch update: one jitted scan over pre-gathered batches.
+
+    epoch(carry, data, perm) -> (carry, metrics):
+      carry = (g_params, d_params, g_opt, d_opt, rng), donated;
+      data  = dict of full device-resident encoded dataset arrays (N, ...);
+      perm  = (n_batches, batch_size) int32 row indices for this epoch.
+    The batch gather happens on device, so per-epoch host work is one
+    permutation draw and one dispatch.
+    """
+    g_optim, d_optim, step_body = _make_step_body(model, cfg, use_jax_oracle)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def epoch(carry, data, perm):
+        batches = jax.tree.map(lambda a: a[perm], data)
+        return jax.lax.scan(step_body, carry, batches)
+
+    return g_optim, d_optim, epoch
 
 
 def encode_batch(model: DesignModel, ds: Dataset, idx: np.ndarray) -> Dict[str, np.ndarray]:
@@ -142,6 +245,12 @@ def encode_batch(model: DesignModel, ds: Dataset, idx: np.ndarray) -> Dict[str, 
     }
 
 
+def encode_dataset(model: DesignModel, ds: Dataset) -> Dict[str, jnp.ndarray]:
+    """Encode every row once and upload to device (train_gan hot-path)."""
+    full = encode_batch(model, ds, np.arange(ds.n))
+    return {k: jnp.asarray(v) for k, v in full.items()}
+
+
 def train_gan(
     model: DesignModel,
     ds: Dataset,
@@ -149,36 +258,47 @@ def train_gan(
     iters: int = 5,
     seed: int = 0,
     log_every: int = 0,
+    use_jax_oracle: Optional[bool] = None,
 ) -> TrainState:
-    """Mini-batch alternating training (Algorithm 1, lines 1-21)."""
+    """Mini-batch alternating training (Algorithm 1, lines 1-21).
+
+    Each iteration is one device-resident ``lax.scan`` over the epoch's
+    batches; the dataset is encoded and uploaded exactly once.
+    """
     rng = jax.random.PRNGKey(seed)
     rng, g_rng, d_rng = jax.random.split(rng, 3)
     g_params = G.init_generator(g_rng, cfg, model.space)
     d_params = G.init_discriminator(d_rng, cfg, model.space)
-    g_optim, d_optim, step = make_train_step(model, cfg)
+    g_optim, d_optim, epoch = make_epoch_fn(model, cfg, use_jax_oracle)
     g_opt = g_optim.init(g_params)
     d_opt = d_optim.init(d_params)
 
-    state = TrainState(g_params, d_params, g_opt, d_opt, rng)
     np_rng = np.random.default_rng(seed)
     n = ds.n
     bs = min(cfg.batch_size, n)
+    n_batches = n // bs
+    data = encode_dataset(model, ds)
+
+    carry = (g_params, d_params, g_opt, d_opt, rng)
+    history: List[Dict[str, float]] = []
     t0 = time.time()
     for it in range(iters):
-        perm = np_rng.permutation(n)
-        for b0 in range(0, n - bs + 1, bs):
-            batch = encode_batch(model, ds, perm[b0 : b0 + bs])
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            (state.g_params, state.d_params, state.g_opt, state.d_opt,
-             state.rng, metrics) = step(
-                state.g_params, state.d_params, state.g_opt, state.d_opt,
-                batch, state.rng)
-            rec = {k: float(v) for k, v in metrics.items()}
+        perm = np_rng.permutation(n)[: n_batches * bs]
+        perm = jnp.asarray(perm.reshape(n_batches, bs).astype(np.int32))
+        with warnings.catch_warnings():
+            # CPU backends can't honor buffer donation; that is fine here.
+            warnings.filterwarnings("ignore", message="Some donated buffers")
+            carry, metrics = epoch(carry, data, perm)
+        metrics = {k: np.asarray(v) for k, v in metrics.items()}
+        for b in range(n_batches):
+            rec = {k: float(v[b]) for k, v in metrics.items()}
             rec["iter"] = it
-            state.history.append(rec)
+            history.append(rec)
         if log_every and (it % log_every == 0):
-            m = state.history[-1]
+            m = history[-1]
             print(f"[train_gan] iter={it} loss_g={m['loss_g']:.4f} "
                   f"loss_d={m['loss_d']:.4f} critic={m['loss_critic']:.4f} "
                   f"sat={m['sat_rate']:.3f} t={time.time()-t0:.1f}s")
-    return state
+
+    g_params, d_params, g_opt, d_opt, rng = carry
+    return TrainState(g_params, d_params, g_opt, d_opt, rng, history)

@@ -10,6 +10,7 @@ from __future__ import annotations
 import abc
 from typing import Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.encoding import ConfigDim, ConfigSpace
@@ -33,11 +34,33 @@ class DesignModel(abc.ABC):
         (e.g. tile does not fit SRAM) return latency = +inf.
         """
 
+    def evaluate_jax(self, net: jnp.ndarray, config: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Pure-jnp twin of `evaluate`, traceable inside jit/scan/vmap.
+
+        Same contract as `evaluate` (infeasible -> +inf) but every op is a
+        jax primitive so the oracle can be fused into the Algorithm 1 train
+        step and the Algorithm 2 candidate scan without a host callback.
+        Models without a jnp port simply don't override this; callers must
+        check `has_jax_oracle` and fall back to `jax.pure_callback`.
+        """
+        raise NotImplementedError(f"{self.name} has no jnp oracle")
+
+    @property
+    def has_jax_oracle(self) -> bool:
+        """True when this model overrides `evaluate_jax`."""
+        return type(self).evaluate_jax is not DesignModel.evaluate_jax
+
     # convenience -----------------------------------------------------------
     def evaluate_indices(self, net_idx, cfg_idx):
         net = self.net_space.values_from_indices(net_idx)
         cfg = self.space.values_from_indices(cfg_idx)
         return self.evaluate(net, cfg)
+
+    def evaluate_jax_indices(self, net_idx, cfg_idx):
+        """Traceable index-space entry point (choice tables are constants)."""
+        net = self.net_space.values_from_indices_jax(net_idx)
+        cfg = self.space.values_from_indices_jax(cfg_idx)
+        return self.evaluate_jax(net, cfg)
 
 
 def pow2_choices(lo: int, hi: int) -> Tuple[float, ...]:

@@ -10,6 +10,7 @@ standing in for the paper's "calibrated by simulation and synthesis".
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.encoding import ConfigSpace
@@ -49,32 +50,33 @@ class DnnWeaverModel(DesignModel):
         self.space = make_dnnweaver_space()
         self.net_space = make_net_space()
 
-    def _derive_tiles(self, net: np.ndarray, iss, wss, oss):
-        ic, oc, ow, oh, kw, kh = (net[..., i].astype(np.float64) for i in range(6))
+    def _derive_tiles(self, net, iss, wss, oss, xp=np):
+        dt = np.float64 if xp is np else jnp.float32
+        ic, oc, ow, oh, kw, kh = (net[..., i].astype(dt) for i in range(6))
         # template schedule: keep full kernel window; tile channels to fit
         # the weight SRAM, tile the output plane to fit the output SRAM.
         tkw, tkh = kw, kh
 
         def pow2floor(x):
-            return np.power(2.0, np.floor(np.log2(np.maximum(x, 1.0))))
+            return xp.power(2.0, xp.floor(xp.log2(xp.maximum(x, 1.0))))
 
-        tic = np.maximum(pow2floor(np.minimum(ic, wss / np.maximum(kw * kh, 1.0))), 1.0)
-        toc = np.maximum(pow2floor(np.minimum(
-            np.minimum(oc, oss),
-            wss / np.maximum(tic * kw * kh, 1.0))), 1.0)
+        tic = xp.maximum(pow2floor(xp.minimum(ic, wss / xp.maximum(kw * kh, 1.0))), 1.0)
+        toc = xp.maximum(pow2floor(xp.minimum(
+            xp.minimum(oc, oss),
+            wss / xp.maximum(tic * kw * kh, 1.0))), 1.0)
         # output tile: square-ish plane tile fitting OSS alongside toc
-        plane_cap = np.maximum(oss / np.maximum(toc, 1.0), 1.0)
-        tow = np.maximum(np.minimum(pow2floor(np.sqrt(plane_cap)), ow), 1.0)
-        toh = np.maximum(np.minimum(pow2floor(plane_cap / tow), oh), 1.0)
+        plane_cap = xp.maximum(oss / xp.maximum(toc, 1.0), 1.0)
+        tow = xp.maximum(xp.minimum(pow2floor(xp.sqrt(plane_cap)), ow), 1.0)
+        toh = xp.maximum(xp.minimum(pow2floor(plane_cap / tow), oh), 1.0)
         # input SRAM bounds the im2col patch tile: shrink (toh, tow, tic)
         # in turn (power-of-two halvings) until the patch fits.
         tiles = [toh, tow, tic]
         for j in range(3):
             patch = tiles[2] * tkw * tkh * tiles[1] * tiles[0]
-            excess = np.power(2.0, np.ceil(np.log2(
-                np.maximum(patch / np.maximum(iss, 1.0), 1.0))))
-            f = np.minimum(tiles[j], excess)
-            tiles[j] = np.maximum(tiles[j] / f, 1.0)
+            excess = xp.power(2.0, xp.ceil(xp.log2(
+                xp.maximum(patch / xp.maximum(iss, 1.0), 1.0))))
+            f = xp.minimum(tiles[j], excess)
+            tiles[j] = xp.maximum(tiles[j] / f, 1.0)
         toh, tow, tic = tiles
         return tic, toc, tow, toh, tkw, tkh
 
@@ -86,4 +88,15 @@ class DnnWeaverModel(DesignModel):
         return roofline_latency_power(
             net, pen, FIXED_DSB, FIXED_SDB, iss, wss, oss,
             tic, toc, tow, toh, tkw, tkh,
+        )
+
+    def evaluate_jax(self, net, config):
+        net = jnp.asarray(net, jnp.float32)
+        c = jnp.asarray(config, jnp.float32)
+        pen, iss, wss, oss = (c[..., i] for i in range(4))
+        tic, toc, tow, toh, tkw, tkh = self._derive_tiles(net, iss, wss, oss, xp=jnp)
+        return roofline_latency_power(
+            net, pen, FIXED_DSB, FIXED_SDB, iss, wss, oss,
+            tic, toc, tow, toh, tkw, tkh,
+            xp=jnp,
         )

@@ -14,8 +14,10 @@ tests (more PEs => never slower & never less power-hungry, etc.).
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.encoding import ConfigSpace
@@ -69,52 +71,57 @@ def make_im2col_space() -> ConfigSpace:
     )
 
 
-def _ceil_div(a, b):
-    return np.ceil(a / b)
+def _ceil_div(a, b, xp=np):
+    return xp.ceil(a / b)
 
 
 def roofline_latency_power(
-    net: np.ndarray,
+    net,
     pen, dsb, sdb, iss, wss, oss, tic, toc, tow, toh, tkw, tkh,
+    xp=np,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Vectorized 3-phase pipelined roofline.  All inputs broadcastable (B,).
 
     Returns (latency_seconds, power_watts); infeasible -> latency = +inf.
+    `xp` selects the array namespace: `np` (float64, host) or `jnp`
+    (float32, traceable) — one formula, two backends, kept in lockstep by
+    tests/test_oracle_parity.py.
     """
-    ic, oc, ow, oh, kw, kh = (net[..., i].astype(np.float64) for i in range(6))
+    dt = np.float64 if xp is np else jnp.float32
+    ic, oc, ow, oh, kw, kh = (net[..., i].astype(dt) for i in range(6))
 
     # effective tile sizes never exceed the real dims
-    tic = np.minimum(tic, ic)
-    toc = np.minimum(toc, oc)
-    tow = np.minimum(tow, ow)
-    toh = np.minimum(toh, oh)
-    tkw = np.minimum(tkw, kw)
-    tkh = np.minimum(tkh, kh)
+    tic = xp.minimum(tic, ic)
+    toc = xp.minimum(toc, oc)
+    tow = xp.minimum(tow, ow)
+    toh = xp.minimum(toh, oh)
+    tkw = xp.minimum(tkw, kw)
+    tkh = xp.minimum(tkh, kh)
 
     n_tiles = (
-        _ceil_div(ic, tic) * _ceil_div(oc, toc) * _ceil_div(ow, tow)
-        * _ceil_div(oh, toh) * _ceil_div(kw, tkw) * _ceil_div(kh, tkh)
+        _ceil_div(ic, tic, xp) * _ceil_div(oc, toc, xp) * _ceil_div(ow, tow, xp)
+        * _ceil_div(oh, toh, xp) * _ceil_div(kw, tkw, xp) * _ceil_div(kh, tkh, xp)
     )
-    n_out_tiles = _ceil_div(oc, toc) * _ceil_div(ow, tow) * _ceil_div(oh, toh)
+    n_out_tiles = _ceil_div(oc, toc, xp) * _ceil_div(ow, tow, xp) * _ceil_div(oh, toh, xp)
 
     tile_macs = tic * toc * tow * toh * tkw * tkh
     # --- per-tile phase cycle counts --------------------------------------
-    t_comp = _ceil_div(tile_macs, pen)
+    t_comp = _ceil_div(tile_macs, pen, xp)
     in_words = tic * tkw * tkh * tow * toh        # im2col patch matrix tile
     w_words = tic * toc * tkw * tkh
-    t_load = _ceil_div(in_words + w_words, dsb)
+    t_load = _ceil_div(in_words + w_words, dsb, xp)
     out_words = toc * tow * toh                   # written once per out tile
-    t_store = _ceil_div(out_words, sdb)
+    t_store = _ceil_div(out_words, sdb, xp)
 
     # 3-stage pipeline: steady state bound by the slowest phase; store only
     # fires on output-tile boundaries so its steady-state weight is scaled.
     store_amort = t_store * (n_out_tiles / n_tiles)
-    bottleneck = np.maximum(np.maximum(t_load, t_comp), store_amort)
-    cycles = bottleneck * np.maximum(n_tiles - 1.0, 0.0) + t_load + t_comp + t_store
+    bottleneck = xp.maximum(xp.maximum(t_load, t_comp), store_amort)
+    cycles = bottleneck * xp.maximum(n_tiles - 1.0, 0.0) + t_load + t_comp + t_store
 
     # --- feasibility -------------------------------------------------------
     feasible = (in_words <= iss) & (w_words <= wss) & (out_words <= oss)
-    cycles = np.where(feasible, cycles, np.inf)
+    cycles = xp.where(feasible, cycles, xp.inf)
 
     # --- power -------------------------------------------------------------
     total_macs = ic * oc * ow * oh * kw * kh
@@ -128,10 +135,11 @@ def roofline_latency_power(
         + P_STATIC_SRAM_W * (iss + wss + oss)
         + P_STATIC_BW_W * (sdb + dsb)
     )
-    with np.errstate(invalid="ignore"):
-        p_dyn = np.where(np.isfinite(lat_s), energy / np.maximum(lat_s, 1e-12), 0.0)
+    ctx = np.errstate(invalid="ignore") if xp is np else contextlib.nullcontext()
+    with ctx:
+        p_dyn = xp.where(xp.isfinite(lat_s), energy / xp.maximum(lat_s, 1e-12), 0.0)
     power = p_static + p_dyn
-    power = np.where(feasible, power, np.inf)
+    power = xp.where(feasible, power, xp.inf)
     return lat_s, power
 
 
@@ -152,4 +160,15 @@ class Im2colModel(DesignModel):
         )
         return roofline_latency_power(
             net, pen, dsb, sdb, iss, wss, oss, tic, toc, tow, toh, tkw, tkh
+        )
+
+    def evaluate_jax(self, net, config):
+        net = jnp.asarray(net, jnp.float32)
+        c = jnp.asarray(config, jnp.float32)
+        (pen, sdb, dsb, iss, wss, oss, tic, toc, tow, toh, tkw, tkh) = (
+            c[..., i] for i in range(12)
+        )
+        return roofline_latency_power(
+            net, pen, dsb, sdb, iss, wss, oss, tic, toc, tow, toh, tkw, tkh,
+            xp=jnp,
         )

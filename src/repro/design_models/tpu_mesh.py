@@ -16,6 +16,7 @@ Objectives (the paper's "latency <= x, power <= y" format):
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.encoding import ConfigSpace
@@ -67,6 +68,14 @@ class TpuMeshModel(DesignModel):
     def evaluate(self, net: np.ndarray, config: np.ndarray):
         net = np.asarray(net, np.float64)
         c = np.asarray(config, np.float64)
+        return self._evaluate(net, c, xp=np)
+
+    def evaluate_jax(self, net, config):
+        net = jnp.asarray(net, jnp.float32)
+        c = jnp.asarray(config, jnp.float32)
+        return self._evaluate(net, c, xp=jnp)
+
+    def _evaluate(self, net, c, xp):
         layers, dm, ffm, seq, gb, vocab = (net[..., i] for i in range(6))
         pods, dp, tp, micro, remat, bytes_p, comp = (c[..., i] for i in range(7))
 
@@ -89,7 +98,7 @@ class TpuMeshModel(DesignModel):
         state_bytes = n_params * (bytes_p + 8.0) / chips_per_pod
         act_rows = gb / (pods * dp * micro)               # rows resident
         act_bytes = act_rows * seq * dm * 2.0 * layers / tp
-        act_bytes = np.where(remat > 0, act_bytes, act_bytes * 6.0)
+        act_bytes = xp.where(remat > 0, act_bytes, act_bytes * 6.0)
         hbm = state_bytes + act_bytes
         feasible &= hbm <= HBM_CAP
         # traffic: weights streamed once per microbatch (+bwd), acts 3x
@@ -102,29 +111,29 @@ class TpuMeshModel(DesignModel):
         # regardless of group size — calibrated against the compiled-HLO
         # roofline of the 16x16 and 4x64 validation runs, see
         # benchmarks/bench_gan_hillclimb.py + EXPERIMENTS.md §Perf C).
-        rows_per_chip = gb / np.maximum(pods * dp * micro, 1.0)
+        rows_per_chip = gb / xp.maximum(pods * dp * micro, 1.0)
         act_bytes_chip = rows_per_chip * seq * dm * 2.0
         # 4 TP all-reduces per layer, fwd+bwd, every microbatch
-        tp_bytes = np.where(tp > 1,
+        tp_bytes = xp.where(tp > 1,
                             layers * 4.0 * 2.0 * 2.0 * act_bytes_chip * micro,
                             0.0)
         # FSDP all-gather of params each microbatch (fwd+bwd) over dp:
         # each chip receives ~ params/tp per gather
-        ag_bytes = np.where(dp > 1, micro * 2.0 * n_params * bytes_p / tp, 0.0)
+        ag_bytes = xp.where(dp > 1, micro * 2.0 * n_params * bytes_p / tp, 0.0)
         # gradient reduce-scatter/all-gather over dp (ICI)
-        gr_bytes = np.where(dp > 1, 2.0 * n_params * bytes_p / tp, 0.0)
+        gr_bytes = xp.where(dp > 1, 2.0 * n_params * bytes_p / tp, 0.0)
         t_ici = (tp_bytes + ag_bytes + gr_bytes) / ICI_LINK_BW
         # cross-pod gradient all-reduce over DCN (compressed)
-        dcn_bytes = np.where(pods > 1,
+        dcn_bytes = xp.where(pods > 1,
                              2.0 * n_params * bytes_p / comp / chips_per_pod, 0.0)
         t_dcn = dcn_bytes / DCN_BW
         t_coll = t_ici + t_dcn
 
         # --- objectives -------------------------------------------------------
-        latency = np.maximum(np.maximum(t_comp, t_mem), t_coll)
-        util = np.where(latency > 0, t_comp / np.maximum(latency, 1e-12), 0.0)
+        latency = xp.maximum(xp.maximum(t_comp, t_mem), t_coll)
+        util = xp.where(latency > 0, t_comp / xp.maximum(latency, 1e-12), 0.0)
         power = chips * (CHIP_IDLE_W + CHIP_DYN_W * util)
 
-        latency = np.where(feasible, latency, np.inf)
-        power = np.where(feasible, power, np.inf)
+        latency = xp.where(feasible, latency, xp.inf)
+        power = xp.where(feasible, power, xp.inf)
         return latency, power

@@ -12,23 +12,29 @@ from typing import Optional, Tuple
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """`jax.make_mesh` with explicit Auto axis types where the installed
+    jax supports them (>= 0.5); older versions have no AxisType and their
+    meshes are implicitly Auto already."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Elastic variant: any (pods, data, model) factorization whose product
     matches the available device count."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever this host has (CPU smoke tests: 1 device)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((n, 1), ("data", "model"))

@@ -5,3 +5,40 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_gan_cfg():
+    """Factory for the shared reduced-scale GANConfig used across tier-1
+    GAN tests: same algorithm, CI-sized networks."""
+    from repro.core.gan import GANConfig
+
+    def make(model, *, layers=1, neurons=32, batch_size=64, lr=1e-3, **kw):
+        return GANConfig(n_net=model.net_space.n_dims, **kw).scaled(
+            layers=layers, neurons=neurons, batch_size=batch_size, lr=lr)
+
+    return make
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    """Session-cached small datasets so multiple modules share one
+    generation pass per (model, n, seed).  Returns a fresh copy each
+    call: tests mutate datasets in place (ds.latency[:] = ...), which
+    must not leak through the session cache."""
+    import dataclasses
+
+    from repro.dataset.generator import generate_dataset
+
+    cache = {}
+
+    def make(model, n=512, seed=0):
+        key = (model.name, n, seed)
+        if key not in cache:
+            cache[key] = generate_dataset(model, n, seed=seed)
+        ds = cache[key]
+        return dataclasses.replace(
+            ds, net_idx=ds.net_idx.copy(), cfg_idx=ds.cfg_idx.copy(),
+            latency=ds.latency.copy(), power=ds.power.copy())
+
+    return make

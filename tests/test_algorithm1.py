@@ -28,16 +28,16 @@ class ConstModel(DesignModel):
         return np.full(b, val), np.full(b, val)
 
 
-def _mini_cfg(model):
-    return G.GANConfig(n_net=1, w_critic=0.5).scaled(layers=1, neurons=16,
-                                                     batch_size=32, lr=1e-3)
+def _mini_cfg(tiny_gan_cfg, model):
+    """Shared conftest config factory at this module's historic scale."""
+    return tiny_gan_cfg(model, neurons=16, batch_size=32, w_critic=0.5)
 
 
 def _fake_ds(model, n=64):
     return generate_dataset(model, n, seed=0)
 
 
-def test_all_satisfied_masks_config_loss():
+def test_all_satisfied_masks_config_loss(tiny_gan_cfg):
     """When every generated config satisfies (lines 10-12), Loss_config
     contributes 0 and G is driven purely by the critic term."""
     model = ConstModel(always_satisfy=True)
@@ -45,40 +45,40 @@ def test_all_satisfied_masks_config_loss():
     # objectives = 1.0 > 0.5 model output -> always satisfied
     ds.latency[:] = 1.0
     ds.power[:] = 1.0
-    st = train_gan(model, ds, _mini_cfg(model), iters=1)
+    st = train_gan(model, ds, _mini_cfg(tiny_gan_cfg, model), iters=1)
     for h in st.history:
         assert h["loss_config"] == pytest.approx(0.0, abs=1e-6)
         assert h["sat_rate"] == pytest.approx(1.0)
 
 
-def test_none_satisfied_full_config_loss():
+def test_none_satisfied_full_config_loss(tiny_gan_cfg):
     model = ConstModel(always_satisfy=False)
     ds = _fake_ds(model)
     ds.latency[:] = 1.0   # model returns 2.0 > 1.0 -> never satisfied
     ds.power[:] = 1.0
-    st = train_gan(model, ds, _mini_cfg(model), iters=1)
+    st = train_gan(model, ds, _mini_cfg(tiny_gan_cfg, model), iters=1)
     for h in st.history:
         assert h["loss_config"] > 0.0
         assert h["sat_rate"] == pytest.approx(0.0)
 
 
-def test_design_model_is_out_of_gradient_path():
+def test_design_model_is_out_of_gradient_path(tiny_gan_cfg):
     """The design model runs through pure_callback; its output enters
     losses only as constants.  If a gradient ever flowed into it, the
     callback (numpy code) would raise under trace."""
     model = ConstModel(always_satisfy=False)
     ds = _fake_ds(model)
-    st = train_gan(model, ds, _mini_cfg(model), iters=1)
+    st = train_gan(model, ds, _mini_cfg(tiny_gan_cfg, model), iters=1)
     leaves = jax.tree.leaves(st.g_params)
     assert all(np.isfinite(np.asarray(l)).all() for l in leaves)
 
 
-def test_d_receives_stop_gradient_probs():
+def test_d_receives_stop_gradient_probs(tiny_gan_cfg):
     """During the D update the G output is stop_gradient-ed: updating D
     must leave G params bit-identical (alternating updates, Alg. 1)."""
     model = ConstModel(always_satisfy=False)
     ds = _fake_ds(model)
-    cfg = _mini_cfg(model)
+    cfg = _mini_cfg(tiny_gan_cfg, model)
     rng = jax.random.PRNGKey(0)
     g_params = G.init_generator(jax.random.fold_in(rng, 1), cfg, model.space)
     before = jax.tree.map(lambda a: np.asarray(a).copy(), g_params)
@@ -103,10 +103,10 @@ def test_d_receives_stop_gradient_probs():
     assert all(float(jnp.max(jnp.abs(g))) == 0.0 for g in jax.tree.leaves(grads))
 
 
-def test_critic_gradient_flows_through_frozen_d():
+def test_critic_gradient_flows_through_frozen_d(tiny_gan_cfg):
     """G's critic gradient must be nonzero (it flows THROUGH D into G)."""
     model = ConstModel(always_satisfy=False)
-    cfg = _mini_cfg(model)
+    cfg = _mini_cfg(tiny_gan_cfg, model)
     ds = _fake_ds(model)
     rng = jax.random.PRNGKey(0)
     g_params = G.init_generator(jax.random.fold_in(rng, 1), cfg, model.space)

@@ -11,6 +11,14 @@ from repro.train import step as TS
 
 ARCHS = configs.list_archs()
 
+# Tier-1 exercises one dense and one MoE architecture end-to-end; the full
+# 10-arch matrix (~2 min of CPU jit compiles) runs under `-m slow`.  The
+# exotic numerics (ssm/xlstm/moe internals) are covered directly by
+# test_substrate.py either way.
+CORE_ARCHS = {"stablelm_1_6b", "mixtral_8x7b"}
+ARCH_PARAMS = [a if a in CORE_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+               for a in ARCHS]
+
 
 def _inputs(m, b=2, s=16, seed=0):
     rng = jax.random.PRNGKey(seed)
@@ -26,7 +34,7 @@ def _inputs(m, b=2, s=16, seed=0):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_forward_shapes_no_nans(arch):
     m = configs.get_reduced(arch)
     params = MB.init_params(jax.random.PRNGKey(0), m)
@@ -39,7 +47,7 @@ def test_forward_shapes_no_nans(arch):
     assert not np.isnan(np.asarray(logits, np.float32)).any()
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_train_step_reduces_loss(arch):
     m = configs.get_reduced(arch)
     params = MB.init_params(jax.random.PRNGKey(0), m)
@@ -55,7 +63,7 @@ def test_train_step_reduces_loss(arch):
     assert losses[-1] < losses[0]      # same batch: loss must fall
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_step_no_nans(arch):
     m = configs.get_reduced(arch)
     params = MB.init_params(jax.random.PRNGKey(0), m)
@@ -74,12 +82,13 @@ def test_decode_step_no_nans(arch):
     assert not np.isnan(np.asarray(logits, np.float32)).any()
 
 
+@pytest.mark.slow   # eager token-by-token loop; decode_step_no_nans covers tier-1
 @pytest.mark.parametrize("arch", ["stablelm-1.6b", "gemma3-1b", "hymba-1.5b"])
 def test_decode_matches_forward(arch):
     """Token-by-token decode logits == teacher-forced forward logits."""
     m = configs.get_reduced(arch)
     params = MB.init_params(jax.random.PRNGKey(0), m)
-    b, s = 2, 12
+    b, s = 2, 8
     toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, m.vocab)
     full = MB.forward(params, m, toks)
     states = MB.init_decode_state(params, m, b, cache_len=64)

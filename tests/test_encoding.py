@@ -1,6 +1,10 @@
 """ConfigSpace encoding properties (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CI image — seeded-random fallback
+    from _mini_hypothesis import given, settings, strategies as st
 
 from repro.core.encoding import ConfigDim, ConfigSpace, Normalizer
 

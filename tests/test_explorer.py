@@ -1,6 +1,10 @@
 """Candidate enumeration (probability threshold) properties — §6.1."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CI image — seeded-random fallback
+    from _mini_hypothesis import given, settings, strategies as st
 
 from repro.core.encoding import ConfigDim, ConfigSpace
 from repro.core.explorer import enumerate_candidates

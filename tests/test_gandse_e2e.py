@@ -11,12 +11,12 @@ from repro.design_models.dnnweaver import DnnWeaverModel
 
 
 @pytest.fixture(scope="module")
-def trained():
+def trained(tiny_gan_cfg, small_dataset):
     model = DnnWeaverModel()
-    cfg = GANConfig(n_net=model.net_space.n_dims, w_critic=1.0).scaled(
-        layers=2, neurons=128, batch_size=256, lr=1e-4)
+    cfg = tiny_gan_cfg(model, layers=2, neurons=128, batch_size=256,
+                       lr=1e-4, w_critic=1.0)
     g = GANDSE(model, cfg)
-    g.train(n_data=3000, iters=4, seed=0)
+    g.train(n_data=0, iters=4, seed=0, ds=small_dataset(model, n=2048))
     return g
 
 
@@ -30,7 +30,7 @@ def test_training_history_recorded(trained):
 
 def test_explore_satisfies_generous_objectives(trained):
     """With 2-3x slack most tasks must be satisfied after short training."""
-    tasks = generate_tasks(trained.model, 40, seed=5, slack=(2.0, 3.0))
+    tasks = generate_tasks(trained.model, 20, seed=5, slack=(2.0, 3.0))
     res = trained.explore_tasks(tasks)
     s = summarize(res)
     assert s["n_satisfied"] >= 0.6 * s["n_tasks"]
@@ -75,11 +75,11 @@ def test_selector_never_worsens_generator_argmax(trained):
             assert sel.satisfied
 
 
-def test_dataset_objectives_are_witnessed():
+def test_dataset_objectives_are_witnessed(small_dataset):
     """Every dataset row's (L, P) is achieved by its own config — the
     (objective, witness) pairing used for training."""
     model = DnnWeaverModel()
-    ds = generate_dataset(model, 500, seed=3)
+    ds = small_dataset(model, n=500, seed=3)
     lat, pw = model.evaluate_indices(ds.net_idx, ds.cfg_idx)
     np.testing.assert_allclose(lat, ds.latency, rtol=1e-12)
     np.testing.assert_allclose(pw, ds.power, rtol=1e-12)

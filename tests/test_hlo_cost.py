@@ -18,9 +18,10 @@ def _compiled_text():
         y, _ = jax.lax.scan(body, x, None, length=TRIPS)
         return y.sum()
 
+    from repro.launch.mesh import make_mesh
+
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n_dev,), ("d",))
     with mesh:
         c = jax.jit(
             f,

@@ -1,7 +1,11 @@
 """Algorithm 2 (design selector) properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CI image — seeded-random fallback
+    from _mini_hypothesis import given, settings, strategies as st
 
 from repro.core.encoding import ConfigDim, ConfigSpace
 from repro.core.selector import select

@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.nn import moe as M
@@ -45,6 +44,7 @@ def test_moe_aux_loss_bounds(rng):
 # ---------------------------------------------------------------------------
 # SSM / xLSTM streaming consistency
 # ---------------------------------------------------------------------------
+@pytest.mark.slow   # 24-token eager decode loop; chunked variants cover tier-1
 def test_ssm_decode_matches_full_scan(rng):
     p = S.ssm_init(jax.random.PRNGKey(0), 16, d_state=8)
     x = jnp.asarray(rng.normal(size=(2, 24, 16)), jnp.float32)
@@ -230,9 +230,9 @@ def test_collective_bytes_real_lowering():
     """Parser agrees with a known tiny SPMD program: an all-reduce of a
     (8,) f32 under psum."""
     import jax
+    from repro.launch.mesh import make_mesh
     from repro.utils.hlo import collective_bytes
-    mesh = jax.make_mesh((len(jax.devices()),), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((len(jax.devices()),), ("d",))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     def f(x):
@@ -249,6 +249,7 @@ def test_collective_bytes_real_lowering():
     assert out["n_ops"] >= 1 or len(jax.devices()) == 1
 
 
+@pytest.mark.slow   # 128-token x 2 routes; the 32-token streaming test covers tier-1
 def test_mlstm_chunkwise_matches_stepwise(rng):
     """The chunkwise-parallel mLSTM (§Perf xlstm hillclimb) is numerically
     identical to the stepwise reference, including carried state."""
