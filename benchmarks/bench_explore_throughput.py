@@ -1,0 +1,132 @@
+"""Exploration throughput benchmark: batched vs sequential serving path.
+
+The paper's "negligible DSE time" claim (§7.2, Table 5) is measured one
+task at a time; a production deployment serves many concurrent DSE tasks.
+This bench compares, at T tasks x >= 1024 candidates each on the
+high-dimension im2col space:
+
+- **sequential**: the per-task loop (``explore_tasks(batched=False)``) —
+  one G dispatch, one host ``itertools.product`` enumeration, and one
+  per-task Algorithm 2 scan dispatch per task;
+- **batched**: ``explore_batch`` — vmapped G inference, on-device
+  mixed-radix candidate enumeration, and ONE vmapped Algorithm 2 scan for
+  the whole batch.
+
+  PYTHONPATH=src python benchmarks/bench_explore_throughput.py [--quick]
+
+Timings are interleaved min-of-trials after a warmup pass (CPU CI boxes
+are noisy).  The acceptance bar: batched >= 5x sequential at the default
+scale (64 tasks, cap 2048 => every task carries > 1024 candidates).  The
+script exits nonzero otherwise and appends each run to the repo-root
+``BENCH_explore.json`` trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.core import gan as G
+from repro.core.dse_api import GANDSE
+from repro.core.explorer import ExplorerConfig
+from repro.dataset.generator import generate_dataset, generate_tasks
+from repro.design_models.im2col import Im2colModel
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+TRAJECTORY = os.environ.get("REPRO_BENCH_TRAJECTORY", "BENCH_explore.json")
+
+
+def build(quick: bool):
+    """Random-init G at serving scale: exploration throughput does not
+    depend on training quality, only on the dispatch structure."""
+    model = Im2colModel()
+    layers, neurons = (1, 64) if quick else (2, 256)
+    cfg = G.GANConfig(n_net=model.net_space.n_dims).scaled(
+        layers=layers, neurons=neurons, batch_size=64)
+    # threshold below uniform(1/13) employs every choice; the trim then caps
+    # the product in (cap/2, cap], so cap=2048 guarantees > 1024 candidates
+    g = GANDSE(model, cfg, ExplorerConfig(prob_threshold=0.01,
+                                          max_candidates=2048))
+    ds = generate_dataset(model, 512, seed=0)
+    g.attach(ds, G.init_generator(jax.random.PRNGKey(3), cfg, model.space))
+    tasks = generate_tasks(model, 64, seed=2)
+    return g, tasks
+
+
+def run(quick: bool = False) -> Dict:
+    g, tasks = build(quick)
+    n_tasks = int(tasks.net_idx.shape[0])
+
+    # warmup / compile both routes, and check the candidate-count floor
+    res = g.explore_batch(tasks, seed=0)
+    g.explore_tasks(tasks, seed=0, batched=False)
+    n_cands = [r.selection.n_candidates for r in res]
+    assert min(n_cands) >= 1024, f"scale check failed: min {min(n_cands)}"
+
+    trials = 2 if quick else 3
+    best = {"batched": float("inf"), "sequential": float("inf")}
+    for _ in range(trials):                    # interleaved: noise-robust
+        t0 = time.perf_counter()
+        g.explore_batch(tasks, seed=0)
+        best["batched"] = min(best["batched"], time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        g.explore_tasks(tasks, seed=0, batched=False)
+        best["sequential"] = min(best["sequential"], time.perf_counter() - t0)
+
+    out = {
+        "n_tasks": n_tasks,
+        "n_candidates_min": int(min(n_cands)),
+        "n_candidates_mean": float(np.mean(n_cands)),
+        "sequential_s": best["sequential"],
+        "batched_s": best["batched"],
+        "tasks_per_s_sequential": n_tasks / best["sequential"],
+        "tasks_per_s_batched": n_tasks / best["batched"],
+        "speedup": best["sequential"] / best["batched"],
+        "quick": quick,
+    }
+    print(f"[explore_throughput] T={n_tasks} cands>={out['n_candidates_min']} "
+          f"seq={out['sequential_s']*1e3:.1f}ms "
+          f"batched={out['batched_s']*1e3:.1f}ms "
+          f"({out['speedup']:.1f}x, {out['tasks_per_s_batched']:.0f} tasks/s)",
+          flush=True)
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "explore_throughput.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    # append to the perf trajectory so speedups accumulate across PRs
+    traj = []
+    if os.path.exists(TRAJECTORY):
+        with open(TRAJECTORY) as f:
+            traj = json.load(f)
+    traj.append(out)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(traj, f, indent=1)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale: smaller G, fewer trials (same "
+                         "64x1024+ task scale)")
+    ap.add_argument("--min-speedup", type=float, default=5.0,
+                    help="fail below this batched-vs-sequential ratio; use "
+                         "a loose bound (e.g. 2.0) on noisy shared runners")
+    args = ap.parse_args(argv)
+    out = run(quick=args.quick)
+    if out["speedup"] < args.min_speedup:
+        print(f"FAIL: batched exploration only {out['speedup']:.2f}x faster "
+              f"(< {args.min_speedup:g}x bar)")
+        return 1
+    print(f"ok: batched exploration {out['speedup']:.1f}x faster than the "
+          f"sequential loop (>= {args.min_speedup:g}x bar)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

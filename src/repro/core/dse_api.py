@@ -3,6 +3,8 @@
 - Training phase: ``GANDSE.train`` (once per design template / design model)
 - Parsing phase:  ``parse_network`` (abstract layer description -> net params)
 - Exploration:    ``GANDSE.explore`` (G inference -> candidates -> Algorithm 2)
+  and its batched device-resident twin ``GANDSE.explore_batch`` (one
+  dispatch chain for a whole task batch; what ``explore_tasks`` routes to)
 - Implementation: ``GANDSE.emit_config`` (structured artifact; stands in for
   the paper's RTL generator, see DESIGN.md §2)
 """
@@ -17,7 +19,7 @@ import numpy as np
 
 from repro.core import gan as G
 from repro.core.explorer import Explorer, ExplorerConfig
-from repro.core.selector import Selection, select
+from repro.core.selector import Selection, select, select_batch
 from repro.core.train import TrainState, train_gan
 from repro.dataset.generator import Dataset, DSETask, generate_dataset
 from repro.design_models.base import DesignModel
@@ -70,20 +72,73 @@ class GANDSE:
         self.ds = ds if ds is not None else generate_dataset(self.model, n_data, seed=seed)
         self.state = train_gan(self.model, self.ds, self.gan_cfg, iters=iters,
                                seed=seed, log_every=log_every)
-        self._explorer = Explorer(self.model, self.ds, self.state.g_params,
-                                  self.gan_cfg, self.explorer_cfg)
+        self.attach(self.ds, self.state.g_params)
         return self.state
+
+    def attach(self, ds: Dataset, g_params: Dict) -> Explorer:
+        """Serving entry: wire a dataset (for its normalizers) and trained
+        generator params into the explorer without retraining — e.g. params
+        restored from a checkpoint, or a hot-swap after an out-of-band
+        retrain.  The compiled G inference is shared across Explorer
+        instances (cached on (space, gan_cfg)), so a swap never recompiles.
+        """
+        self.ds = ds
+        self._explorer = Explorer(self.model, ds, g_params, self.gan_cfg,
+                                  self.explorer_cfg)
+        return self._explorer
 
     # ---- exploration phase ---------------------------------------------------
     def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
                 seed: int = 0) -> DSEResult:
-        assert self._explorer is not None, "call train() first"
+        assert self._explorer is not None, "call train() or attach() first"
         t0 = time.time()
         cands = self._explorer.candidates(net_idx, lat_obj, pow_obj, seed=seed)
         sel = select(self.model, net_idx, cands, lat_obj, pow_obj)
         return DSEResult(sel, float(lat_obj), float(pow_obj), time.time() - t0)
 
-    def explore_tasks(self, tasks: DSETask, seed: int = 0) -> List[DSEResult]:
+    def explore_batch(self, tasks: DSETask, seed: int = 0) -> List[DSEResult]:
+        """Batched device-resident exploration: vmapped G inference ->
+        on-device candidate enumeration -> batched Algorithm 2, one dispatch
+        chain for the whole task batch.  Task i returns the same Selection
+        as ``explore(tasks.net_idx[i], ..., seed=seed + i)`` — identical
+        candidate sets always; the winner too, except when `explore` routes
+        a small candidate set through the float64 host loop and two
+        near-tied candidates differ by less than float32 resolution (the
+        same caveat as `select`'s device route).  dse_seconds is the
+        amortized per-task wall-clock (total / n_tasks).  Models without a
+        jnp oracle fall back to the sequential host route.
+        """
+        assert self._explorer is not None, "call train() or attach() first"
+        n_tasks = int(tasks.net_idx.shape[0])
+        if n_tasks == 0:
+            return []
+        if not self.model.has_jax_oracle:
+            return self._explore_seq(tasks, seed)
+        t0 = time.time()
+        cand, valid, counts = self._explorer.candidates_batch(
+            tasks.net_idx, tasks.lat_obj, tasks.pow_obj, seed=seed)
+        sels = select_batch(self.model, tasks.net_idx, cand, valid, counts,
+                            tasks.lat_obj, tasks.pow_obj)
+        per_task = (time.time() - t0) / n_tasks
+        return [
+            DSEResult(sel, float(tasks.lat_obj[i]), float(tasks.pow_obj[i]),
+                      per_task)
+            for i, sel in enumerate(sels)
+        ]
+
+    def explore_tasks(self, tasks: DSETask, seed: int = 0,
+                      batched: Optional[bool] = None) -> List[DSEResult]:
+        """Explore a task batch.  batched=None (default) routes through
+        `explore_batch` whenever the model has a jnp oracle; False forces
+        the sequential per-task loop (same results, one dispatch chain per
+        task)."""
+        if batched is None:
+            batched = self.model.has_jax_oracle
+        if batched:
+            return self.explore_batch(tasks, seed=seed)
+        return self._explore_seq(tasks, seed)
+
+    def _explore_seq(self, tasks: DSETask, seed: int) -> List[DSEResult]:
         return [
             self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
                          seed=seed + i)

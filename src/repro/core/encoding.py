@@ -9,6 +9,7 @@ deviation.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -51,6 +52,10 @@ class ConfigSpace:
         for d in self.dims:
             out *= d.n
         return out
+
+    @property
+    def max_group_size(self) -> int:
+        return max(d.n for d in self.dims)
 
     # ---- index <-> value -------------------------------------------------
     def values_from_indices(self, idx: np.ndarray) -> np.ndarray:
@@ -100,6 +105,16 @@ class ConfigSpace:
             [rng.integers(0, d.n, size=n) for d in self.dims], axis=-1
         )
 
+    def split_groups_padded(self, flat, fill=0.0) -> Tuple[jnp.ndarray, np.ndarray]:
+        """Batched padded per-group view: (..., onehot_width) -> (..., n_dims,
+        max_group_size) with `fill` in the padding slots, plus the (n_dims,
+        max_group_size) validity mask.  One wide gather instead of a ragged
+        slice chain — the jnp twin of `split_groups` for vectorized per-group
+        ops (softmax, threshold masks, argmax) over arbitrary leading dims.
+        """
+        gidx, mask, _ = padded_group_layout(self)
+        return jnp.where(mask, flat[..., gidx], fill), mask
+
     def values_from_indices_jax(self, idx) -> jnp.ndarray:
         """jnp twin of `values_from_indices`: traceable constant-table gather.
 
@@ -112,6 +127,34 @@ class ConfigSpace:
             for i, d in enumerate(self.dims)
         ]
         return jnp.stack(cols, axis=-1)
+
+
+@functools.lru_cache(maxsize=None)
+def padded_group_layout(space: ConfigSpace):
+    """Constant index maps for vectorized per-group ops.
+
+    Groups have ragged sizes; padding them to (n_dims, max_n) lets per-group
+    softmax/threshold/argmax run as ONE wide op instead of a slice/concat
+    chain per group (which costs a long tail of small kernels per step).
+    Returns (gather_idx (n_dims, max_n), mask, flat_scatter (onehot_width,)):
+    ``flat[..., gather_idx]`` -> padded view; ``padded.reshape(..., -1)
+    [..., flat_scatter]`` -> flat view.  Plain numpy outputs: they embed as
+    jaxpr constants (device arrays here would leak tracers through the
+    cache when first built under a trace).
+    """
+    sizes = space.group_sizes
+    mx = max(sizes)
+    gidx = np.zeros((len(sizes), mx), np.int32)
+    mask = np.zeros((len(sizes), mx), bool)
+    flat2pad = np.zeros(space.onehot_width, np.int32)
+    off = 0
+    for g, n in enumerate(sizes):
+        for j in range(n):
+            gidx[g, j] = off + j
+            mask[g, j] = True
+            flat2pad[off + j] = g * mx + j
+        off += n
+    return gidx, mask, flat2pad
 
 
 @dataclasses.dataclass(frozen=True)

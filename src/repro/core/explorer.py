@@ -6,23 +6,32 @@ configuration sets are the combinations of all the employed choices of all
 the configurations."
 
 The cartesian product can explode combinatorially; we cap it at
-``max_candidates`` by greedily trimming the lowest-probability employed
-choices (argmax choices are never trimmed), which preserves the paper's
-behaviour for realistic thresholds while bounding memory.
+``max_candidates`` by trimming the lowest-probability employed choices
+(argmax choices are never trimmed), which preserves the paper's behaviour
+for realistic thresholds while bounding memory.
+
+Two routes produce identical candidate sets:
+
+- ``enumerate_candidates``: host numpy + ``itertools.product`` for one task;
+- ``enumerate_candidates_batch``: the device-resident batch twin — threshold
+  mask -> per-group employed counts -> mixed-radix index arithmetic that
+  unravels the cartesian product directly into a ``(T, C_pad, n_dims)``
+  padded candidate tensor, with ``C_pad`` bucketed to the next power of two
+  so the jit cache stays bounded.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import itertools
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gan as G
-from repro.core.encoding import ConfigSpace, binary_log2_encode
+from repro.core.encoding import ConfigSpace, padded_group_layout
 from repro.dataset.generator import Dataset
 from repro.design_models.base import DesignModel
 
@@ -45,6 +54,52 @@ def _employed_choices(probs_g: np.ndarray, thresh: float) -> List[np.ndarray]:
     return out
 
 
+def _trimmed_employed(
+    space: ConfigSpace,
+    probs: np.ndarray,
+    thresh: float,
+    max_candidates: int,
+) -> List[np.ndarray]:
+    """Per-group employed choice sets after the candidate cap (host route)."""
+    groups = [np.asarray(g) for g in space.split_groups(probs)]
+    employed = _employed_choices(groups, thresh)
+
+    counts = [len(e) for e in employed]
+    product = 1
+    for c in counts:
+        product *= c
+    if product > max_candidates:
+        # cap the cartesian product: drop non-argmax employed choices in
+        # ascending probability order until the product fits (one argsort —
+        # dropping a choice never changes the other probabilities, so the
+        # ascending order IS the greedy drop-the-global-minimum order; the
+        # stable sort resolves ties in group-major, choice-major order, the
+        # order a greedy re-scan would visit them).  Argmax choices are
+        # never droppable, so the product always reaches <= max_candidates
+        # (worst case: every group collapses to its argmax, product 1).
+        gis, cis, ps = [], [], []
+        for gi, (g, e) in enumerate(zip(groups, employed)):
+            am = int(np.argmax(g))
+            for ci in e:
+                if ci != am:
+                    gis.append(gi)
+                    cis.append(int(ci))
+                    ps.append(g[ci])
+        dropped = [set() for _ in groups]
+        for k in np.argsort(np.asarray(ps), kind="stable"):
+            if product <= max_candidates:
+                break
+            gi = gis[k]
+            dropped[gi].add(cis[k])
+            product = product // counts[gi] * (counts[gi] - 1)
+            counts[gi] -= 1
+        employed = [
+            e[~np.isin(e, sorted(d))] if d else e
+            for e, d in zip(employed, dropped)
+        ]
+    return employed
+
+
 def enumerate_candidates(
     space: ConfigSpace,
     probs: np.ndarray,
@@ -52,34 +107,138 @@ def enumerate_candidates(
     max_candidates: int,
 ) -> np.ndarray:
     """probs: (onehot_width,) -> (C, n_dims) int candidate index matrix."""
-    groups = [np.asarray(g) for g in space.split_groups(probs)]
-    employed = _employed_choices(groups, thresh)
+    employed = _trimmed_employed(space, probs, thresh, max_candidates)
+    return np.array(list(itertools.product(*employed)), dtype=np.int32)
 
-    # cap the cartesian product: repeatedly drop the globally least-probable
-    # non-argmax employed choice until the product fits.
-    def product_size(emp):
-        s = 1
-        for e in emp:
-            s *= len(e)
-        return s
 
-    while product_size(employed) > max_candidates:
-        worst_g, worst_i, worst_p = -1, -1, np.inf
-        for gi, (g, e) in enumerate(zip(groups, employed)):
-            if len(e) <= 1:
-                continue
-            am = int(np.argmax(g))
-            for ci in e:
-                if ci == am:
-                    continue
-                if g[ci] < worst_p:
-                    worst_g, worst_i, worst_p = gi, ci, g[ci]
-        if worst_g < 0:
-            break
-        employed[worst_g] = employed[worst_g][employed[worst_g] != worst_i]
+# ---------------------------------------------------------------------------
+# device-resident batched enumeration
+# ---------------------------------------------------------------------------
+#: largest max_candidates the batch route accepts (asserted at entry).
+#: Running cartesian-product values are clamped to _PROD_CLAMP during the
+#: on-device trim: strictly above any permitted cap, so a clamped value
+#: still compares `> cap` correctly, while partial products stay exact
+#: int32 (clamp * max group size 1024 < 2**31).
+_PROD_LIM = 1 << 20
+_PROD_CLAMP = _PROD_LIM + 1
 
-    combos = np.array(list(itertools.product(*employed)), dtype=np.int32)
-    return combos
+
+@functools.lru_cache(maxsize=None)
+def _batched_enum_fns(space: ConfigSpace):
+    """Jitted (masks, unravel) pair for on-device candidate enumeration.
+
+    ``masks``: probs (T, onehot_width) -> per-group keep masks + counts +
+    totals, applying the same threshold/argmax/trim rules as the host
+    ``enumerate_candidates`` (bit-for-bit: same probs in -> same sets out).
+    ``unravel``: mixed-radix index arithmetic turning the kept sets into the
+    (T, c_pad, n_dims) padded candidate tensor — ``c_pad`` is static so the
+    jit cache holds one entry per power-of-two bucket.
+    """
+    gidx, mask, _ = padded_group_layout(space)
+    n_groups, mx = mask.shape
+    mask_j = jnp.asarray(mask)
+
+    def _clamped_product(counts):
+        # python loop over the (static, small) group count; clamping keeps
+        # every partial product < 2**31 while preserving `> cap` comparisons
+        p = jnp.int32(1)
+        for g in range(n_groups):
+            p = jnp.minimum(p * counts[g], _PROD_CLAMP)
+        return p
+
+    def _masks_one(probs_pad, thresh, cap):
+        am = jnp.argmax(probs_pad, axis=-1)
+        am_oh = jnp.arange(mx)[None, :] == am[:, None]
+        emp = (mask_j & (probs_pad > thresh)) | am_oh    # argmax always kept
+        droppable = (emp & ~am_oh).reshape(-1)
+        p_flat = jnp.where(droppable, probs_pad.reshape(-1), jnp.inf)
+        order = jnp.argsort(p_flat)          # stable: host-loop tie order
+        counts0 = emp.sum(axis=-1).astype(jnp.int32)
+
+        def step(counts, slot):
+            do = droppable[slot] & (_clamped_product(counts) > cap)
+            counts = counts.at[slot // mx].add(-do.astype(jnp.int32))
+            return counts, do
+
+        counts, dropped = jax.lax.scan(step, counts0, order)
+        keep = emp & ~jnp.zeros_like(droppable).at[order].set(dropped) \
+            .reshape(n_groups, mx)
+        return keep, counts
+
+    @jax.jit
+    def masks(probs, thresh, cap):
+        padded, _ = space.split_groups_padded(probs, fill=-jnp.inf)
+        keep, counts = jax.vmap(_masks_one, in_axes=(0, None, None))(
+            padded, thresh, cap)
+        total = jnp.prod(counts, axis=-1)    # <= cap after trim: int32-safe
+        return keep, counts, total
+
+    @functools.partial(jax.jit, static_argnames="c_pad")
+    def unravel(keep, counts, total, c_pad):
+        table = jnp.argsort(~keep, axis=-1)  # kept slots first, ascending
+        # row-major strides (last group fastest — itertools.product order)
+        rev = jnp.cumprod(counts[:, ::-1], axis=-1)[:, ::-1]
+        stride = jnp.concatenate([rev[:, 1:], jnp.ones_like(rev[:, :1])],
+                                 axis=-1)
+        j = jnp.arange(c_pad, dtype=jnp.int32)
+        digit = (j[None, :, None] // stride[:, None, :]) % counts[:, None, :]
+        cand = jnp.take_along_axis(table, digit.transpose(0, 2, 1), axis=-1)
+        valid = j[None, :] < total[:, None]
+        return cand.transpose(0, 2, 1).astype(jnp.int32), valid
+
+    return masks, unravel
+
+
+def enumerate_candidates_batch(
+    space: ConfigSpace,
+    probs,
+    thresh: float,
+    max_candidates: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, np.ndarray]:
+    """Device twin of ``enumerate_candidates`` over a task batch.
+
+    probs: (T, onehot_width) array (host or device) ->
+      cand  (T, C_pad, n_dims) int32 device candidate indices,
+      valid (T, C_pad) bool device mask of real (non-padding) rows,
+      counts (T,) host int per-task candidate counts.
+
+    Row t's first counts[t] candidates equal ``enumerate_candidates`` on
+    probs[t] exactly.  C_pad is the next power of two >= max(counts),
+    bucketing recompiles to at most log2(max_candidates) cache entries.
+    """
+    assert space.max_group_size <= 1024 and 1 <= max_candidates <= _PROD_LIM, \
+        "on-device trim needs max group size <= 1024 and cap <= 2**20"
+    masks, unravel = _batched_enum_fns(space)
+    keep, counts, total = masks(jnp.asarray(probs), jnp.float32(thresh),
+                                jnp.int32(max_candidates))
+    counts_host = np.asarray(total)
+    c_pad = 1 << max(int(counts_host.max(initial=1)) - 1, 1).bit_length()
+    cand, valid = unravel(keep, counts, total, c_pad)
+    return cand, valid, counts_host
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_fwd(space: ConfigSpace, gan_cfg: G.GANConfig):
+    """Module-level jitted G inference, cached on (space, gan_cfg): a fresh
+    Explorer (e.g. per retrain / hot-swap) reuses the compiled forward
+    instead of recompiling from scratch.
+
+    Per-task noise streams: task t averages n_samples draws from
+    fold_in(keys[t], s) — the same streams whether tasks run one at a time
+    or batched, which is the batched-vs-sequential parity contract.
+    """
+    @functools.partial(jax.jit, static_argnames="n_samples")
+    def fwd(g_params, net_enc, obj_enc, keys, n_samples):
+        def one_task(net, obj, key):
+            def one(s):
+                noise = G.sample_noise(jax.random.fold_in(key, s), 1, gan_cfg)
+                return G.generator_apply(g_params, space, net[None], obj[None],
+                                         noise)[0]
+            return jnp.mean(jax.vmap(one)(jnp.arange(n_samples)), axis=0)
+
+        return jax.vmap(one_task)(net_enc, obj_enc, keys)
+
+    return fwd
 
 
 @dataclasses.dataclass
@@ -93,35 +252,44 @@ class Explorer:
     cfg: ExplorerConfig = dataclasses.field(default_factory=ExplorerConfig)
 
     def __post_init__(self):
-        space = self.model.space
-        gan_cfg = self.gan_cfg
+        self._fwd = _cached_fwd(self.model.space, self.gan_cfg)
 
-        @functools.partial(jax.jit, static_argnames="n_samples")
-        def fwd(g_params, net_enc, obj_enc, rng, n_samples):
-            # all noise draws in one dispatch: vmap over folded keys, then
-            # average — the whole G inference stays device-resident.
-            def one(i):
-                noise = G.sample_noise(jax.random.fold_in(rng, i),
-                                       net_enc.shape[0], gan_cfg)
-                return G.generator_apply(g_params, space, net_enc, obj_enc, noise)
+    def generator_probs_device(self, net_idx: np.ndarray, lat_obj, pow_obj,
+                               seed: int = 0) -> jnp.ndarray:
+        """Vmapped G forward: (T, onehot_width) device mean probs.
 
-            return jnp.mean(jax.vmap(one)(jnp.arange(n_samples)), axis=0)
-
-        self._fwd = fwd
-
-    def generator_probs(self, net_idx: np.ndarray, lat_obj, pow_obj, seed: int = 0):
-        """Batched G forward: (T, onehot_width) mean probs over noise draws."""
+        Task row t draws its noise from PRNGKey(seed + t), so row t is
+        bitwise-equal to a single-task call with seed + t — batching a task
+        never changes its candidates.
+        """
         net_enc = self.ds.net_encoded(self.model, np.atleast_2d(net_idx))
-        obj_enc = self.ds.obj_encoded(np.atleast_1d(lat_obj), np.atleast_1d(pow_obj))
-        rng = jax.random.PRNGKey(seed)
+        obj_enc = self.ds.obj_encoded(np.atleast_1d(lat_obj),
+                                      np.atleast_1d(pow_obj))
+        keys = jax.vmap(jax.random.PRNGKey)(seed + jnp.arange(net_enc.shape[0]))
+        return self._fwd(self.g_params, jnp.asarray(net_enc),
+                         jnp.asarray(obj_enc), keys,
+                         n_samples=self.cfg.noise_samples)
+
+    def generator_probs(self, net_idx: np.ndarray, lat_obj, pow_obj,
+                        seed: int = 0) -> np.ndarray:
+        """Host-array view of `generator_probs_device`."""
         return np.asarray(
-            self._fwd(self.g_params, jnp.asarray(net_enc), jnp.asarray(obj_enc),
-                      rng, n_samples=self.cfg.noise_samples)
-        )
+            self.generator_probs_device(net_idx, lat_obj, pow_obj, seed))
 
     def candidates(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
                    seed: int = 0) -> np.ndarray:
         probs = self.generator_probs(net_idx, lat_obj, pow_obj, seed)[0]
         return enumerate_candidates(
             self.model.space, probs, self.cfg.prob_threshold, self.cfg.max_candidates
+        )
+
+    def candidates_batch(self, net_idx: np.ndarray, lat_obj, pow_obj,
+                         seed: int = 0):
+        """Device-resident candidates for a task batch: G inference and the
+        cartesian-product enumeration both stay on device; see
+        `enumerate_candidates_batch` for the return contract."""
+        probs = self.generator_probs_device(net_idx, lat_obj, pow_obj, seed)
+        return enumerate_candidates_batch(
+            self.model.space, probs, self.cfg.prob_threshold,
+            self.cfg.max_candidates
         )

@@ -11,43 +11,18 @@ Both are multilayer perceptrons with ReLU activations and Adam optimizers
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.encoding import ConfigSpace
+from repro.core.encoding import ConfigSpace, padded_group_layout
 from repro.nn import layers as L
 
-
-@functools.lru_cache(maxsize=None)
-def _padded_layout(space: ConfigSpace):
-    """Constant index maps for vectorized per-group ops.
-
-    Groups have ragged sizes; padding them to (n_dims, max_n) lets the
-    per-group softmax/argmax run as ONE wide op instead of a slice/concat
-    chain per group (which costs a long tail of small kernels per step).
-    Returns (gather_idx (n_dims, max_n), mask, flat_scatter (onehot_width,)):
-    ``flat[..., gather_idx]`` -> padded view; ``padded.reshape(..., -1)
-    [..., flat_scatter]`` -> flat view.  Plain numpy outputs: they embed as
-    jaxpr constants (device arrays here would leak tracers through the
-    cache when first built under a trace).
-    """
-    sizes = space.group_sizes
-    mx = max(sizes)
-    gidx = np.zeros((len(sizes), mx), np.int32)
-    mask = np.zeros((len(sizes), mx), bool)
-    flat2pad = np.zeros(space.onehot_width, np.int32)
-    off = 0
-    for g, n in enumerate(sizes):
-        for j in range(n):
-            gidx[g, j] = off + j
-            mask[g, j] = True
-            flat2pad[off + j] = g * mx + j
-        off += n
-    return gidx, mask, flat2pad
+#: shared with encoding.py — the padded per-group layout is also the basis of
+#: the explorer's on-device candidate enumeration
+_padded_layout = padded_group_layout
 
 
 @dataclasses.dataclass(frozen=True)

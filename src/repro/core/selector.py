@@ -15,12 +15,14 @@ Models with a jnp oracle (``DesignModel.evaluate_jax``) run the whole
 thing — candidate scoring AND the update chain — as one jitted
 ``jax.lax.scan`` on device; candidate sets are padded to the next power of
 two so the jit cache stays small.  Models without a jnp port fall back to
-the original host loop.
+the original host loop.  ``select_batch`` vmaps the same scan over a task
+batch so all (T, C_pad) oracle evaluations and update chains resolve in a
+single dispatch.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,14 +52,15 @@ class Selection:
 _JAX_MIN_CANDIDATES = 512
 
 
-def _algorithm2_scan(model: DesignModel):
-    """Jitted device-resident Algorithm 2: score + update chain in one scan.
+def _algorithm2_core(model: DesignModel):
+    """Traceable single-task Algorithm 2: score + update chain in one scan.
 
-    Built once per model instance (cached on the model); recompiles only
-    per padded candidate count.  valid marks real (non-padding) rows.
+    valid marks real (non-padding) candidate rows.  Jitted directly for the
+    per-task route (`_algorithm2_scan`) and vmapped over a task batch for
+    `select_batch` — the update chain sees the same float32 values either
+    way, so batching never changes the winner.
     """
 
-    @jax.jit
     def run(net_idx, cand_idx, valid, lo, po):
         lat, pw = model.evaluate_jax_indices(net_idx[None, :], cand_idx)
         finite = jnp.isfinite(lat) & jnp.isfinite(pw) & valid
@@ -88,6 +91,19 @@ def _algorithm2_scan(model: DesignModel):
         return l_opt, p_opt, chosen
 
     return run
+
+
+def _algorithm2_scan(model: DesignModel):
+    """Jitted per-task Algorithm 2 (cached on the model); recompiles only
+    per padded candidate count."""
+    return jax.jit(_algorithm2_core(model))
+
+
+def _algorithm2_batch(model: DesignModel):
+    """Batched Algorithm 2: the single-task scan vmapped over tasks, so all
+    (T, C_pad) oracle evaluations and update chains run as ONE jitted
+    program (one dispatch for the whole task batch)."""
+    return jax.jit(jax.vmap(_algorithm2_core(model)))
 
 
 def _select_jax(
@@ -189,3 +205,59 @@ def select(
         satisfied=bool(satisfied),
         n_candidates=int(cand_idx.shape[0]),
     )
+
+
+def select_batch(
+    model: DesignModel,
+    net_idx: np.ndarray,
+    cand_idx,
+    valid,
+    n_candidates: np.ndarray,
+    lat_obj: np.ndarray,
+    pow_obj: np.ndarray,
+    noise_tol: float = 0.01,
+) -> List[Selection]:
+    """Batched device Algorithm 2 over a padded candidate tensor.
+
+    net_idx (T, n_net_dims), cand_idx (T, C_pad, n_dims), valid (T, C_pad)
+    (as produced by ``enumerate_candidates_batch``), n_candidates (T,) real
+    per-task counts, objectives (T,).  Requires a jnp oracle
+    (``model.has_jax_oracle``).
+
+    All T update chains run as one jitted vmapped scan; like the per-task
+    device route, candidates are scored in float32 but the winners' reported
+    metrics and `satisfied` come from one batched float64 host-oracle call.
+    Task t's Selection equals ``select(model, net_idx[t],
+    cand_idx[t][:n_candidates[t]], ..., use_jax=True)``.
+    """
+    run = model.__dict__.get("_alg2_batch")
+    if run is None:
+        run = model.__dict__["_alg2_batch"] = _algorithm2_batch(model)
+    net_idx = np.asarray(net_idx, np.int32)
+    n_tasks = net_idx.shape[0]
+    lo = np.asarray(lat_obj, np.float64).reshape(-1)
+    po = np.asarray(pow_obj, np.float64).reshape(-1)
+    _, _, chosen = run(
+        jnp.asarray(net_idx), jnp.asarray(cand_idx), jnp.asarray(valid),
+        jnp.asarray(lo, jnp.float32), jnp.asarray(po, jnp.float32),
+    )
+    chosen = np.asarray(chosen)
+    cand_host = np.asarray(cand_idx)
+    has = chosen >= 0
+    if has.any():       # one float64 host-oracle call for every winner
+        win_cfg = cand_host[np.flatnonzero(has), chosen[has]]
+        lat64, pw64 = model.evaluate_indices(net_idx[has], win_cfg)
+
+    out, k = [], 0
+    for t in range(n_tasks):
+        n = int(n_candidates[t])
+        if not has[t]:
+            out.append(Selection(None, np.inf, np.inf, False, n))
+            continue
+        l_opt, p_opt = float(lat64[k]), float(pw64[k])
+        k += 1
+        satisfied = (l_opt <= lo[t] * (1 + noise_tol)
+                     and p_opt <= po[t] * (1 + noise_tol))
+        out.append(Selection(cand_host[t, chosen[t]].copy(), l_opt, p_opt,
+                             bool(satisfied), n))
+    return out

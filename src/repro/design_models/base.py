@@ -28,20 +28,26 @@ class DesignModel(abc.ABC):
 
     @abc.abstractmethod
     def evaluate(self, net: np.ndarray, config: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """(B, n_net_dims) values, (B, n_cfg_dims) values -> (latency, power).
+        """(..., n_net_dims) values, (..., n_cfg_dims) values -> (latency, power).
 
-        Latency in cycles, power in watts; both (B,).  Infeasible configs
-        (e.g. tile does not fit SRAM) return latency = +inf.
+        Latency in seconds, power in watts; both shaped like the
+        broadcast leading dims.  Leading dims are arbitrary and follow
+        numpy broadcasting: (B,) for a flat batch, or e.g. net
+        (T, 1, n_net_dims) against config (T, C, n_cfg_dims) -> (T, C) for
+        the batched Algorithm 2 (T tasks x C candidates each, one call).
+        Infeasible configs (e.g. tile does not fit SRAM) return
+        latency = +inf.
         """
 
     def evaluate_jax(self, net: jnp.ndarray, config: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Pure-jnp twin of `evaluate`, traceable inside jit/scan/vmap.
 
-        Same contract as `evaluate` (infeasible -> +inf) but every op is a
-        jax primitive so the oracle can be fused into the Algorithm 1 train
-        step and the Algorithm 2 candidate scan without a host callback.
-        Models without a jnp port simply don't override this; callers must
-        check `has_jax_oracle` and fall back to `jax.pure_callback`.
+        Same contract as `evaluate` (broadcast leading dims, infeasible ->
+        +inf) but every op is a jax primitive so the oracle can be fused
+        into the Algorithm 1 train step and the Algorithm 2 candidate scan
+        without a host callback.  Models without a jnp port simply don't
+        override this; callers must check `has_jax_oracle` and fall back to
+        `jax.pure_callback`.
         """
         raise NotImplementedError(f"{self.name} has no jnp oracle")
 
@@ -52,12 +58,14 @@ class DesignModel(abc.ABC):
 
     # convenience -----------------------------------------------------------
     def evaluate_indices(self, net_idx, cfg_idx):
+        """Index-space entry point; leading dims broadcast like `evaluate`."""
         net = self.net_space.values_from_indices(net_idx)
         cfg = self.space.values_from_indices(cfg_idx)
         return self.evaluate(net, cfg)
 
     def evaluate_jax_indices(self, net_idx, cfg_idx):
-        """Traceable index-space entry point (choice tables are constants)."""
+        """Traceable index-space entry point (choice tables are constants);
+        leading dims broadcast like `evaluate_jax`."""
         net = self.net_space.values_from_indices_jax(net_idx)
         cfg = self.space.values_from_indices_jax(cfg_idx)
         return self.evaluate_jax(net, cfg)

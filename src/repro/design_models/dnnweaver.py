@@ -42,7 +42,11 @@ def _greedy_tile(cap: np.ndarray, *factors: np.ndarray) -> np.ndarray:
 
 
 class DnnWeaverModel(DesignModel):
-    """Low-dimension design space (4 config dims, |space| = 8*7^3 = 2744)."""
+    """Low-dimension design space (4 config dims, |space| = 8*7^3 = 2744).
+
+    Both oracles broadcast over arbitrary leading dims — (B,) flat batches
+    or (T, C) task-x-candidate grids for the batched Algorithm 2.
+    """
 
     name = "dnnweaver"
 

@@ -80,7 +80,8 @@ def roofline_latency_power(
     pen, dsb, sdb, iss, wss, oss, tic, toc, tow, toh, tkw, tkh,
     xp=np,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Vectorized 3-phase pipelined roofline.  All inputs broadcastable (B,).
+    """Vectorized 3-phase pipelined roofline.  All inputs broadcast over
+    arbitrary leading dims (flat (B,) batches or (T, C) grids).
 
     Returns (latency_seconds, power_watts); infeasible -> latency = +inf.
     `xp` selects the array namespace: `np` (float64, host) or `jnp`
@@ -144,7 +145,11 @@ def roofline_latency_power(
 
 
 class Im2colModel(DesignModel):
-    """High-dimension design space (12 config dims, |space| ~ 3.3e9)."""
+    """High-dimension design space (12 config dims, |space| ~ 3.3e9).
+
+    Both oracles broadcast over arbitrary leading dims — (B,) flat batches
+    or (T, C) task-x-candidate grids for the batched Algorithm 2.
+    """
 
     name = "im2col"
 

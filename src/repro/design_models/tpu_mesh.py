@@ -57,7 +57,11 @@ def make_mesh_space() -> ConfigSpace:
 
 
 class TpuMeshModel(DesignModel):
-    """Analytic 3-term roofline over (workload, mesh config)."""
+    """Analytic 3-term roofline over (workload, mesh config).
+
+    Both oracles broadcast over arbitrary leading dims — (B,) flat batches
+    or (T, C) task-x-candidate grids for the batched Algorithm 2.
+    """
 
     name = "tpu_mesh"
 

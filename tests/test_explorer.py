@@ -63,3 +63,84 @@ def test_example_from_paper():
                       0.35, 0.05, 0.35, 0.25])
     cands = enumerate_candidates(space, probs, 0.25, 100)
     assert cands.shape[0] == 2 * 2
+
+
+def _greedy_reference(space, probs, thresh, max_candidates):
+    """The original O(overflow x groups x choices) greedy trim loop, kept
+    as the behavioural reference for the one-pass argsort trim."""
+    import itertools
+
+    from repro.core.explorer import _employed_choices
+
+    groups = [np.asarray(g) for g in space.split_groups(probs)]
+    employed = _employed_choices(groups, thresh)
+
+    def product_size(emp):
+        s = 1
+        for e in emp:
+            s *= len(e)
+        return s
+
+    while product_size(employed) > max_candidates:
+        worst_g, worst_i, worst_p = -1, -1, np.inf
+        for gi, (g, e) in enumerate(zip(groups, employed)):
+            if len(e) <= 1:
+                continue
+            am = int(np.argmax(g))
+            for ci in e:
+                if ci == am:
+                    continue
+                if g[ci] < worst_p:
+                    worst_g, worst_i, worst_p = gi, ci, g[ci]
+        if worst_g < 0:
+            break
+        employed[worst_g] = employed[worst_g][employed[worst_g] != worst_i]
+
+    return np.array(list(itertools.product(*employed)), dtype=np.int32)
+
+
+def test_argsort_trim_matches_greedy_reference():
+    """The single-pass argsort trim pins the greedy loop's exact output,
+    including tie order, across seeded spaces and trim-forcing caps."""
+    rng = np.random.default_rng(42)
+    for seed in range(20):
+        sizes = list(rng.integers(2, 8, size=int(rng.integers(2, 6))))
+        space = _space(sizes)
+        probs = _probs(space, seed)
+        for thresh, cap in [(0.01, 1), (0.01, 7), (0.05, 16), (0.2, 1000)]:
+            got = enumerate_candidates(space, probs, thresh, cap)
+            ref = _greedy_reference(space, probs, thresh, cap)
+            np.testing.assert_array_equal(got, ref, err_msg=f"{sizes} {cap}")
+
+
+def test_argsort_trim_matches_greedy_on_ties():
+    """Duplicate probabilities: the stable sort must drop in the same
+    group-major order the greedy re-scan visited."""
+    space = _space([3, 3, 3])
+    probs = np.array([0.5, 0.25, 0.25,
+                      0.25, 0.5, 0.25,
+                      0.25, 0.25, 0.5])
+    for cap in (1, 2, 4, 8, 27):
+        got = enumerate_candidates(space, probs, 0.1, cap)
+        ref = _greedy_reference(space, probs, 0.1, cap)
+        np.testing.assert_array_equal(got, ref, err_msg=f"cap={cap}")
+
+
+def test_explorer_forward_is_cached_across_instances():
+    """Constructing a new Explorer (e.g. per retrain) must reuse the
+    module-level compiled G inference, not recompile from scratch."""
+    import jax
+
+    from repro.core import gan as G
+    from repro.core.explorer import Explorer
+    from repro.dataset.generator import generate_dataset
+    from repro.design_models.dnnweaver import DnnWeaverModel
+
+    model = DnnWeaverModel()
+    cfg = G.GANConfig(n_net=model.net_space.n_dims).scaled(
+        layers=1, neurons=16, batch_size=32)
+    ds = generate_dataset(model, 64, seed=0)
+    params = G.init_generator(jax.random.PRNGKey(0), cfg, model.space)
+    e1 = Explorer(model, ds, params, cfg)
+    e2 = Explorer(model, ds, params, cfg)
+    assert e1._fwd is e2._fwd
