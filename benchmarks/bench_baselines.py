@@ -1,0 +1,142 @@
+"""Baseline exploration throughput: batched device routes vs the legacy
+sequential host loops.
+
+PR1/PR2 made the GANDSE path device-resident; this bench gates the same
+treatment for the baselines, at the same serving scale as
+bench_explore_throughput (T=64 tasks on the high-dimension im2col space):
+
+- **LargeMLP**: vmapped noise-averaged forward -> on-device candidate
+  enumeration -> batched Algorithm 2, vs the per-task host loop
+  (itertools.product + per-task select);
+- **SimulatedAnnealing**: one jitted ``lax.while_loop`` anneal vmapped over
+  tasks, vs the host loop's one ``evaluate_indices`` call per visited
+  config;
+- **PolicyGradientDRL**: the rollout as one jitted ``lax.scan`` vmapped
+  over tasks, vs per-step host oracle calls + per-step policy dispatches.
+
+  PYTHONPATH=src python benchmarks/bench_baselines.py [--quick]
+
+Timings are interleaved min-of-trials after a warmup/compile pass.  The
+acceptance bar: every baseline's batched route >= 5x its sequential loop
+(use ``--min-speedup 2`` on noisy shared CI runners).  Exits nonzero below
+the bar and appends each run to the repo-root ``BENCH_baselines.json``
+trajectory (``results/bench_baselines.json`` holds the latest).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+from repro.baselines.drl import PolicyGradientDRL
+from repro.baselines.mlp import LargeMLP
+from repro.baselines.sa import SimulatedAnnealing
+from repro.core.explorer import ExplorerConfig
+from repro.dataset.generator import generate_dataset, generate_tasks
+from repro.design_models.im2col import Im2colModel
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+#: distinct env var from bench_explore_throughput's REPRO_BENCH_TRAJECTORY:
+#: the two trajectories have different schemas and must never share a file
+TRAJECTORY = os.environ.get("REPRO_BENCH_BASELINES_TRAJECTORY",
+                            "BENCH_baselines.json")
+
+N_TASKS = 64
+
+
+def build(quick: bool):
+    """Random-init nets at serving scale: exploration throughput depends on
+    the dispatch structure, not on training quality (the same rule as
+    bench_explore_throughput)."""
+    model = Im2colModel()
+    ds = generate_dataset(model, 512, seed=0)
+    tasks = generate_tasks(model, N_TASKS, seed=2)
+
+    layers, neurons = (1, 64) if quick else (2, 256)
+    # threshold below uniform employs every choice; the trim caps the
+    # product in (cap/2, cap] so every task carries > 1024 candidates
+    mlp = LargeMLP(model, hidden_layers=layers, neurons=neurons,
+                   explorer_cfg=ExplorerConfig(prob_threshold=0.01,
+                                               max_candidates=2048))
+    mlp.attach(ds, mlp.init_params(3))
+
+    drl = PolicyGradientDRL(model, hidden_layers=layers, neurons=neurons)
+    drl.attach(ds, drl.init_params(4))
+
+    sa = SimulatedAnnealing(model)
+    return {"mlp": mlp, "sa": sa, "drl": drl}, tasks
+
+
+def run(quick: bool = False) -> Dict:
+    methods, tasks = build(quick)
+
+    # warmup: compile both routes per method
+    for m in methods.values():
+        m.explore_tasks(tasks, seed=0)
+        m.explore_tasks(tasks, seed=0, batched=False)
+
+    trials = 2 if quick else 3
+    out: Dict = {"n_tasks": N_TASKS, "quick": quick, "methods": {}}
+    for name, m in methods.items():
+        best = {"batched": float("inf"), "sequential": float("inf")}
+        for _ in range(trials):                # interleaved: noise-robust
+            t0 = time.perf_counter()
+            m.explore_tasks(tasks, seed=0)
+            best["batched"] = min(best["batched"], time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            m.explore_tasks(tasks, seed=0, batched=False)
+            best["sequential"] = min(best["sequential"],
+                                     time.perf_counter() - t0)
+        row = {
+            "sequential_s": best["sequential"],
+            "batched_s": best["batched"],
+            "tasks_per_s_batched": N_TASKS / best["batched"],
+            "speedup": best["sequential"] / best["batched"],
+        }
+        out["methods"][name] = row
+        print(f"[bench_baselines] {name:4s} T={N_TASKS} "
+              f"seq={row['sequential_s']*1e3:.1f}ms "
+              f"batched={row['batched_s']*1e3:.1f}ms "
+              f"({row['speedup']:.1f}x, "
+              f"{row['tasks_per_s_batched']:.0f} tasks/s)", flush=True)
+    out["min_speedup"] = float(min(r["speedup"]
+                                   for r in out["methods"].values()))
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "bench_baselines.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    traj = []
+    if os.path.exists(TRAJECTORY):
+        with open(TRAJECTORY) as f:
+            traj = json.load(f)
+    traj.append(out)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(traj, f, indent=1)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale: smaller nets, fewer trials (same "
+                         "64-task batch)")
+    ap.add_argument("--min-speedup", type=float, default=5.0,
+                    help="fail if any baseline's batched route is below "
+                         "this ratio; loosen (e.g. 2.0) on noisy runners")
+    args = ap.parse_args(argv)
+    out = run(quick=args.quick)
+    slowest = min(out["methods"], key=lambda k: out["methods"][k]["speedup"])
+    if out["min_speedup"] < args.min_speedup:
+        print(f"FAIL: {slowest} batched route only "
+              f"{out['min_speedup']:.2f}x its sequential loop "
+              f"(< {args.min_speedup:g}x bar)")
+        return 1
+    print(f"ok: every batched baseline >= {out['min_speedup']:.1f}x its "
+          f"sequential loop (bar {args.min_speedup:g}x, slowest: {slowest})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

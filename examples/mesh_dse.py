@@ -15,7 +15,7 @@ from repro.design_models.tpu_mesh import TpuMeshModel
 
 def main():
     model = TpuMeshModel()
-    cfg = GANConfig(n_net=model.net_space.n_dims, w_critic=1.0).scaled(
+    cfg = GANConfig(n_net=model.net_space.n_dims, w_critic=0.5).scaled(
         layers=3, neurons=256, batch_size=512, lr=1e-4)
     gandse = GANDSE(model, cfg)
     print("training mesh-DSE explorer...")

@@ -7,18 +7,35 @@ in objective violation, with a bonus when the state satisfies the
 objectives.  An MLP actor is trained offline over dataset-derived tasks;
 at DSE time a short greedy rollout is run and the best visited
 configuration is returned (iterative DSE, but with a learned policy).
+
+Violations are clipped to ``VIOL_CLIP`` per metric: infeasible configs used
+to map to ~1e9 violations whose one-step rewards swamped the moving
+baseline and the advantage normalization.
+
+DSE-time rollouts have two routes:
+
+- **device** (default when the model has a jnp oracle): the whole rollout
+  (policy forward -> action -> ``DesignModel.evaluate_jax`` scoring) is one
+  jitted ``lax.scan`` vmapped over the task batch — ONE dispatch chain for
+  T tasks instead of (rollout_len x T) host oracle calls.  Lane t draws
+  from PRNGKey(seed + t), so a batched lane is bitwise-equal to the
+  single-task device run with seed + t; winners are re-scored once by the
+  float64 host oracle (the ``select_batch`` rule).
+- **host** (fallback for models without a jnp oracle): the original numpy
+  loop.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.selector import Selection
+from repro.core.explorer import task_keys
+from repro.core.selector import Selection, is_satisfied
 from repro.core.dse_api import DSEResult
 from repro.core.train import encode_batch
 from repro.dataset.generator import Dataset, DSETask, generate_dataset
@@ -26,11 +43,82 @@ from repro.design_models.base import DesignModel
 from repro.nn import layers as L
 from repro.optim import adam, apply_updates
 
+#: per-metric violation cap: bounds any one-step reward to
+#: 2 * VIOL_CLIP + sat_bonus regardless of how infeasible a config is
+VIOL_CLIP = 10.0
+
 
 def _violation(lat, pw, lo, po):
-    lat = np.nan_to_num(lat, posinf=1e9)
-    pw = np.nan_to_num(pw, posinf=1e9)
-    return np.maximum(0.0, (lat - lo) / lo) + np.maximum(0.0, (pw - po) / po)
+    """Relative objective violation, each metric's term clipped to
+    VIOL_CLIP (NaN/inf metrics saturate at the clip, not at ~1e9)."""
+    lat = np.where(np.isnan(lat), np.inf, np.asarray(lat, np.float64))
+    pw = np.where(np.isnan(pw), np.inf, np.asarray(pw, np.float64))
+    lv = np.minimum(np.maximum(0.0, (lat - lo) / lo), VIOL_CLIP)
+    pv = np.minimum(np.maximum(0.0, (pw - po) / po), VIOL_CLIP)
+    return lv + pv
+
+
+def _drl_rollout_kernel(model: DesignModel, rollout_len: int,
+                        explore_eps: float):
+    """Jitted vmapped DSE rollout: (params, net_idx (T,), net_enc, obj_enc,
+    lo (T,), po (T,), keys (T,2)) -> (best cfg (T, n_dims), n_eval)."""
+    space = model.space
+    n_dims = space.n_dims
+    sizes = jnp.asarray(space.group_sizes, jnp.int32)
+    offs = np.concatenate([[0], np.cumsum(space.group_sizes)])
+    starts = jnp.asarray(offs[:-1], jnp.int32)
+    ends = jnp.asarray(offs[1:], jnp.int32)
+    n_actions = space.onehot_width
+
+    def onehot(cfg):
+        return jnp.concatenate(
+            [jax.nn.one_hot(cfg[i], d.n) for i, d in enumerate(space.dims)])
+
+    def apply_action(cfg, a):
+        di = jnp.searchsorted(ends, a, side="right")   # a's group
+        return cfg.at[di].set(a - starts[di])
+
+    def score(net_idx, cfg, lo, po):
+        lat, pw = model.evaluate_jax_indices(net_idx[None, :], cfg[None, :])
+        lat = jnp.where(jnp.isnan(lat[0]), jnp.inf, lat[0]).astype(jnp.float32)
+        pw = jnp.where(jnp.isnan(pw[0]), jnp.inf, pw[0]).astype(jnp.float32)
+        lv = jnp.minimum(jnp.maximum(0.0, (lat - lo) / lo), VIOL_CLIP)
+        pv = jnp.minimum(jnp.maximum(0.0, (pw - po) / po), VIOL_CLIP)
+        return lat, pw, lv + pv
+
+    def one_task(params, net_idx, net_enc, obj_enc, lo, po, key):
+        key, k0 = jax.random.split(key)
+        cfg = jnp.floor(
+            jax.random.uniform(k0, (n_dims,)) * sizes).astype(jnp.int32)
+        lat0, pw0, v0 = score(net_idx, cfg, lo, po)
+
+        def step(carry, t):
+            key, cfg, best, best_l, best_p, best_v = carry
+            x = jnp.concatenate([net_enc, obj_enc, onehot(cfg)])
+            logits = L.mlp_apply(params, x[None])[0]
+            key, ke, ka = jax.random.split(key, 3)
+            a = jnp.where(
+                (t > 0) & (jax.random.uniform(ke) < explore_eps),
+                jax.random.randint(ka, (), 0, n_actions),
+                jnp.argmax(logits).astype(jnp.int32))   # greedy at DSE time
+            cfg = apply_action(cfg, a.astype(jnp.int32))
+            lat, pw, v = score(net_idx, cfg, lo, po)
+            improved = (v < best_v) | (
+                (v == best_v) & jnp.isfinite(lat)
+                & (lat + pw < best_l + best_p))
+            best = jnp.where(improved, cfg, best)
+            best_l = jnp.where(improved, lat, best_l)
+            best_p = jnp.where(improved, pw, best_p)
+            best_v = jnp.where(improved, v, best_v)
+            return (key, cfg, best, best_l, best_p, best_v), None
+
+        carry = (key, cfg, cfg, lat0, pw0, v0)
+        (_, _, best, _, _, _), _ = jax.lax.scan(
+            step, carry, jnp.arange(rollout_len))
+        return best
+
+    return jax.jit(jax.vmap(one_task,
+                            in_axes=(None, 0, 0, 0, 0, 0, 0)))
 
 
 @dataclasses.dataclass
@@ -43,7 +131,10 @@ class PolicyGradientDRL:
     batch_tasks: int = 64
     gamma: float = 0.95
     sat_bonus: float = 2.0
+    explore_eps: float = 0.3
     seed: int = 0
+
+    method_name = "DRL"
 
     def __post_init__(self):
         self.ds: Optional[Dataset] = None
@@ -70,14 +161,35 @@ class PolicyGradientDRL:
             off += d.n
         return out
 
+    def _rollout_kernel(self):
+        key = (self.rollout_len, self.explore_eps)
+        kernels = self.model.__dict__.setdefault("_drl_kernels", {})
+        if key not in kernels:
+            kernels[key] = _drl_rollout_kernel(self.model, self.rollout_len,
+                                               self.explore_eps)
+        return kernels[key]
+
+    def attach(self, ds: Dataset, params) -> "PolicyGradientDRL":
+        """Serving entry (mirrors GANDSE.attach): wire a dataset (for its
+        normalizers) and trained policy params without retraining."""
+        self.ds = ds
+        self.params = params
+        return self
+
+    def init_params(self, seed: int = 0):
+        """Fresh policy params — the single definition of the input width
+        (net params + 2 objective channels + config one-hot), shared by
+        `train` and the bench/serving `attach` path."""
+        n_in = self.model.net_space.n_dims + 2 + self.model.space.onehot_width
+        return L.mlp_init(jax.random.PRNGKey(seed), n_in,
+                          [self.neurons] * self.hidden_layers,
+                          self._n_actions)
+
     def train(self, n_data: int, iters: int, seed: int = 0,
               ds: Optional[Dataset] = None, log_every: int = 0):
         self.ds = ds if ds is not None else generate_dataset(self.model, n_data, seed=seed)
         space = self.model.space
-        n_in = self.model.net_space.n_dims + 2 + space.onehot_width
-        rng = jax.random.PRNGKey(seed)
-        self.params = L.mlp_init(rng, n_in, [self.neurons] * self.hidden_layers,
-                                 self._n_actions)
+        self.params = self.init_params(seed)
         optim = adam(self.lr)
         opt = optim.init(self.params)
 
@@ -143,8 +255,35 @@ class PolicyGradientDRL:
                       f"final_viol={viol.mean():.4f} sat={(viol == 0).mean():.3f}")
         return self
 
-    def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
-                seed: int = 0) -> DSEResult:
+    # --- device route -------------------------------------------------------
+    def _explore_device(self, tasks: DSETask, seed: int) -> List[DSEResult]:
+        n_tasks = int(tasks.net_idx.shape[0])
+        t0 = time.time()
+        net_enc = self.ds.net_encoded(self.model, tasks.net_idx)
+        obj_enc = self.ds.obj_encoded(tasks.lat_obj, tasks.pow_obj)
+        best = np.asarray(self._rollout_kernel()(
+            self.params,
+            jnp.asarray(tasks.net_idx, jnp.int32),
+            jnp.asarray(net_enc), jnp.asarray(obj_enc),
+            jnp.asarray(tasks.lat_obj, jnp.float32),
+            jnp.asarray(tasks.pow_obj, jnp.float32),
+            task_keys(seed, n_tasks)))
+        # one float64 host-oracle call re-scores every winner
+        lat64, pw64 = self.model.evaluate_indices(tasks.net_idx, best)
+        per_task = (time.time() - t0) / n_tasks
+        out = []
+        for t in range(n_tasks):
+            lo, po = float(tasks.lat_obj[t]), float(tasks.pow_obj[t])
+            bl, bp = float(lat64[t]), float(pw64[t])
+            sel = Selection(cfg_idx=best[t].copy(), latency=bl, power=bp,
+                            satisfied=is_satisfied(bl, bp, lo, po),
+                            n_candidates=self.rollout_len + 1)
+            out.append(DSEResult(sel, lo, po, per_task))
+        return out
+
+    # --- host route ---------------------------------------------------------
+    def _explore_host(self, net_idx: np.ndarray, lat_obj: float,
+                      pow_obj: float, seed: int) -> DSEResult:
         t0 = time.time()
         space = self.model.space
         rng = np.random.default_rng(seed)
@@ -161,7 +300,7 @@ class PolicyGradientDRL:
             logits = np.asarray(self._logits(self.params, jnp.asarray(net_enc),
                                              jnp.asarray(obj_enc), jnp.asarray(cfg_oh)))
             actions = np.argmax(logits, axis=-1)  # greedy at DSE time
-            if t > 0 and rng.random() < 0.3:      # light exploration
+            if t > 0 and rng.random() < self.explore_eps:  # light exploration
                 actions = np.array([rng.integers(0, self._n_actions)])
             cfg = self._apply_actions(cfg, actions)
             lat, pw = self.model.evaluate_indices(net_idx[None], cfg)
@@ -171,12 +310,32 @@ class PolicyGradientDRL:
             if v < best[3] or (v == best[3] and np.isfinite(l_) and l_ + p_ < best[1] + best[2]):
                 best = (cfg[0].copy(), l_, p_, v)
         c, bl, bp, bv = best
-        satisfied = np.isfinite(bl) and bl <= lo * 1.01 and bp <= po * 1.01
-        sel = Selection(cfg_idx=c, latency=bl, power=bp, satisfied=bool(satisfied),
+        sel = Selection(cfg_idx=c, latency=bl, power=bp,
+                        satisfied=is_satisfied(bl, bp, lo, po),
                         n_candidates=n_eval)
         return DSEResult(sel, lo, po, time.time() - t0)
 
-    def explore_tasks(self, tasks: DSETask, seed: int = 0):
-        return [self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
-                             seed=seed + i)
-                for i in range(tasks.net_idx.shape[0])]
+    # --- public API ---------------------------------------------------------
+    def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
+                seed: int = 0, use_jax: Optional[bool] = None) -> DSEResult:
+        # a model without a jnp oracle always takes the host route, even
+        # when the device route is requested (the GANDSE fallback rule)
+        use_jax = self.model.has_jax_oracle and (use_jax is None or use_jax)
+        if use_jax:
+            tasks = DSETask(net_idx=np.atleast_2d(net_idx),
+                            lat_obj=np.atleast_1d(lat_obj),
+                            pow_obj=np.atleast_1d(pow_obj))
+            return self._explore_device(tasks, seed)[0]
+        return self._explore_host(net_idx, lat_obj, pow_obj, seed)
+
+    def explore_tasks(self, tasks: DSETask, seed: int = 0,
+                      batched: Optional[bool] = None) -> List[DSEResult]:
+        batched = self.model.has_jax_oracle and (batched is None or batched)
+        n_tasks = int(tasks.net_idx.shape[0])
+        if n_tasks == 0:
+            return []
+        if batched:
+            return self._explore_device(tasks, seed)
+        return [self.explore(tasks.net_idx[i], tasks.lat_obj[i],
+                             tasks.pow_obj[i], seed=seed + i, use_jax=False)
+                for i in range(n_tasks)]

@@ -5,26 +5,69 @@ configurations with plain per-group cross entropy — no satisfaction mask,
 no discriminator.  Parameter count is matched to the full GAN (G + D) by
 construction ("much larger than the G in the GAN").  The design selector
 (Algorithm 2) is applied to its thresholded outputs, as in the paper.
+
+Exploration mirrors the GANDSE explorer exactly: the MLP receives the same
+noise input as G (§7.1.4), task t averages ``noise_samples`` forward passes
+drawn from PRNGKey(seed + t), and ``explore_tasks`` serves the whole batch
+device-resident (vmapped forward -> on-device candidate enumeration ->
+batched Algorithm 2), falling back to the sequential host loop for models
+without a jnp oracle.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gan as G
-from repro.core.explorer import ExplorerConfig, enumerate_candidates
-from repro.core.selector import select
+from repro.core.explorer import (ExplorerConfig, enumerate_candidates,
+                                 enumerate_candidates_batch, task_keys)
+from repro.core.selector import select, select_batch
 from repro.core.dse_api import DSEResult
 from repro.core.train import encode_batch
 from repro.dataset.generator import Dataset, DSETask, generate_dataset
 from repro.design_models.base import DesignModel
 from repro.nn import layers as L
 from repro.optim import adam, apply_updates
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_fwd(space, noise_dim: int):
+    """Jitted MLP inference, cached on (space, noise_dim) like the
+    explorer's G forward: retrains / new LargeMLP instances never recompile.
+
+    ``fwd``: plain batch forward (training loss path).
+    ``fwd_mean``: per-task noise-averaged forward for exploration — task t
+    averages n_samples draws from fold_in(keys[t], s), the same streams
+    whether tasks run one at a time or batched (the batched-vs-sequential
+    parity contract, identical to the Explorer's).
+    """
+
+    def _probs(params, net_enc, obj_enc, noise):
+        x = jnp.concatenate([net_enc, obj_enc, noise], axis=-1)
+        logits = L.mlp_apply(params, x)
+        probs = [jax.nn.softmax(g, -1) for g in space.split_groups(logits)]
+        return jnp.concatenate(probs, axis=-1)
+
+    fwd = jax.jit(_probs)
+
+    @functools.partial(jax.jit, static_argnames="n_samples")
+    def fwd_mean(params, net_enc, obj_enc, keys, n_samples):
+        def one_task(net, obj, key):
+            def one(s):
+                noise = G.sample_noise_dim(jax.random.fold_in(key, s), 1,
+                                           noise_dim)
+                return _probs(params, net[None], obj[None], noise)[0]
+            return jnp.mean(jax.vmap(one)(jnp.arange(n_samples)), axis=0)
+
+        return jax.vmap(one_task)(net_enc, obj_enc, keys)
+
+    return fwd, fwd_mean
 
 
 @dataclasses.dataclass
@@ -37,31 +80,32 @@ class LargeMLP:
     noise_dim: int = 8
     explorer_cfg: ExplorerConfig = dataclasses.field(default_factory=ExplorerConfig)
 
+    method_name = "LargeMLP"
+
     def __post_init__(self):
         self.ds: Optional[Dataset] = None
         self.params = None
-        space = self.model.space
-
-        @jax.jit
-        def fwd(params, net_enc, obj_enc, noise):
-            x = jnp.concatenate([net_enc, obj_enc, noise], axis=-1)
-            logits = L.mlp_apply(params, x)
-            probs = [jax.nn.softmax(g, -1) for g in space.split_groups(logits)]
-            return jnp.concatenate(probs, axis=-1)
-
-        self._fwd = fwd
+        self._fwd, self._fwd_mean = _cached_fwd(self.model.space,
+                                                self.noise_dim)
 
     def n_params(self) -> int:
         return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(self.params))
+
+    def init_params(self, seed: int = 0):
+        """Fresh params for this architecture — the single definition of the
+        input width (net params + 2 objective channels + noise), shared by
+        `train` and the bench/serving `attach` path."""
+        n_in = self.model.net_space.n_dims + 2 + self.noise_dim
+        return L.mlp_init(jax.random.PRNGKey(seed), n_in,
+                          [self.neurons] * self.hidden_layers,
+                          self.model.space.onehot_width)
 
     def train(self, n_data: int, iters: int, seed: int = 0,
               ds: Optional[Dataset] = None, log_every: int = 0):
         self.ds = ds if ds is not None else generate_dataset(self.model, n_data, seed=seed)
         space = self.model.space
-        n_in = self.model.net_space.n_dims + 2 + self.noise_dim
         rng = jax.random.PRNGKey(seed)
-        self.params = L.mlp_init(rng, n_in, [self.neurons] * self.hidden_layers,
-                                 space.onehot_width)
+        self.params = self.init_params(seed)
         optim = adam(self.lr)
         opt = optim.init(self.params)
 
@@ -72,8 +116,8 @@ class LargeMLP:
         @jax.jit
         def step(params, opt, batch, rng):
             rng, nrng = jax.random.split(rng)
-            noise = jax.random.uniform(nrng, (batch["net_enc"].shape[0], self.noise_dim),
-                                       jnp.float32, -0.1, 0.1)
+            noise = G.sample_noise_dim(nrng, batch["net_enc"].shape[0],
+                                       self.noise_dim)
             loss, grads = jax.value_and_grad(loss_fn)(params, batch, noise)
             upd, opt = optim.update(grads, opt)
             return apply_updates(params, upd), opt, rng, loss
@@ -91,21 +135,71 @@ class LargeMLP:
                 print(f"[large_mlp] iter={it} loss={float(loss):.4f}")
         return self
 
+    def attach(self, ds: Dataset, params) -> "LargeMLP":
+        """Serving entry (mirrors GANDSE.attach): wire a dataset (for its
+        normalizers) and trained params without retraining."""
+        self.ds = ds
+        self.params = params
+        return self
+
+    def generator_probs_device(self, net_idx: np.ndarray, lat_obj, pow_obj,
+                               seed: int = 0) -> jnp.ndarray:
+        """Vmapped noise-averaged forward: (T, onehot_width) device probs.
+        Task row t draws from PRNGKey(seed + t) (host-int64 sum), bitwise
+        equal to a single-task call with seed + t."""
+        net_enc = self.ds.net_encoded(self.model, np.atleast_2d(net_idx))
+        obj_enc = self.ds.obj_encoded(np.atleast_1d(lat_obj),
+                                      np.atleast_1d(pow_obj))
+        keys = task_keys(seed, net_enc.shape[0])
+        return self._fwd_mean(self.params, jnp.asarray(net_enc),
+                              jnp.asarray(obj_enc), keys,
+                              n_samples=self.explorer_cfg.noise_samples)
+
     def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
                 seed: int = 0) -> DSEResult:
         t0 = time.time()
-        net_enc = self.ds.net_encoded(self.model, np.atleast_2d(net_idx))
-        obj_enc = self.ds.obj_encoded(np.atleast_1d(lat_obj), np.atleast_1d(pow_obj))
-        noise = jnp.zeros((1, self.noise_dim), jnp.float32)
-        probs = np.asarray(self._fwd(self.params, jnp.asarray(net_enc),
-                                     jnp.asarray(obj_enc), noise))[0]
+        probs = np.asarray(
+            self.generator_probs_device(net_idx, lat_obj, pow_obj, seed))[0]
         cands = enumerate_candidates(self.model.space, probs,
                                      self.explorer_cfg.prob_threshold,
                                      self.explorer_cfg.max_candidates)
         sel = select(self.model, net_idx, cands, lat_obj, pow_obj)
         return DSEResult(sel, float(lat_obj), float(pow_obj), time.time() - t0)
 
-    def explore_tasks(self, tasks: DSETask, seed: int = 0):
+    def explore_batch(self, tasks: DSETask, seed: int = 0) -> List[DSEResult]:
+        """Batched device-resident exploration, same structure (and parity
+        contract) as ``GANDSE.explore_batch``: vmapped forward -> on-device
+        candidate enumeration -> batched Algorithm 2.  dse_seconds is the
+        amortized per-task wall-clock."""
+        n_tasks = int(tasks.net_idx.shape[0])
+        if n_tasks == 0:
+            return []
+        if not self.model.has_jax_oracle:
+            return self._explore_seq(tasks, seed)
+        t0 = time.time()
+        probs = self.generator_probs_device(tasks.net_idx, tasks.lat_obj,
+                                            tasks.pow_obj, seed)
+        cand, valid, counts = enumerate_candidates_batch(
+            self.model.space, probs, self.explorer_cfg.prob_threshold,
+            self.explorer_cfg.max_candidates)
+        sels = select_batch(self.model, tasks.net_idx, cand, valid, counts,
+                            tasks.lat_obj, tasks.pow_obj)
+        per_task = (time.time() - t0) / n_tasks
+        return [
+            DSEResult(sel, float(tasks.lat_obj[i]), float(tasks.pow_obj[i]),
+                      per_task)
+            for i, sel in enumerate(sels)
+        ]
+
+    def explore_tasks(self, tasks: DSETask, seed: int = 0,
+                      batched: Optional[bool] = None) -> List[DSEResult]:
+        if batched is None:
+            batched = self.model.has_jax_oracle
+        if batched:
+            return self.explore_batch(tasks, seed=seed)
+        return self._explore_seq(tasks, seed)
+
+    def _explore_seq(self, tasks: DSETask, seed: int) -> List[DSEResult]:
         return [self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
                              seed=seed + i)
                 for i in range(tasks.net_idx.shape[0])]

@@ -3,17 +3,23 @@
 Uniformly samples N configurations and applies the Algorithm 2 selector.
 Useful as the weakest-reasonable baseline and in property tests (any
 learned method should beat it at equal evaluation budget).
+
+``explore_tasks`` serves a task batch device-resident: candidate sampling
+stays on host (cheap, and bitwise-identical to the per-task route), the T
+Algorithm 2 update chains run as one vmapped scan (``select_batch``).
+Models without a jnp oracle fall back to the sequential host loop.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from typing import List, Optional
 
 import numpy as np
 
-from repro.core.selector import select
+from repro.core.selector import select, select_batch
 from repro.core.dse_api import DSEResult
-from repro.dataset.generator import DSETask
+from repro.dataset.generator import Dataset, DSETask
 from repro.design_models.base import DesignModel
 
 
@@ -22,15 +28,48 @@ class RandomSearch:
     model: DesignModel
     n_samples: int = 256
 
+    method_name = "RandomSearch"
+
+    def train(self, n_data: int = 0, iters: int = 0, seed: int = 0,
+              ds: Optional[Dataset] = None, log_every: int = 0):
+        """Random search is model-free — training is a no-op (DSEMethod
+        protocol)."""
+        return self
+
+    def _candidates(self, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        return self.model.space.sample_indices(rng, self.n_samples)
+
     def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
                 seed: int = 0) -> DSEResult:
         t0 = time.time()
-        rng = np.random.default_rng(seed)
-        cands = self.model.space.sample_indices(rng, self.n_samples)
+        cands = self._candidates(seed)
         sel = select(self.model, net_idx, cands, lat_obj, pow_obj)
         return DSEResult(sel, float(lat_obj), float(pow_obj), time.time() - t0)
 
-    def explore_tasks(self, tasks: DSETask, seed: int = 0):
-        return [self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
-                             seed=seed + i)
-                for i in range(tasks.net_idx.shape[0])]
+    def explore_tasks(self, tasks: DSETask, seed: int = 0,
+                      batched: Optional[bool] = None) -> List[DSEResult]:
+        # models without a jnp oracle always take the host route (the
+        # GANDSE fallback rule), even when the batched route is requested
+        batched = self.model.has_jax_oracle and (batched is None or batched)
+        n_tasks = int(tasks.net_idx.shape[0])
+        if n_tasks == 0:
+            return []
+        if not batched:
+            return [self.explore(tasks.net_idx[i], tasks.lat_obj[i],
+                                 tasks.pow_obj[i], seed=seed + i)
+                    for i in range(n_tasks)]
+        t0 = time.time()
+        # task t samples from default_rng(seed + t): same candidate sets as
+        # the sequential route, whatever the batch composition
+        cand = np.stack([self._candidates(seed + t) for t in range(n_tasks)])
+        valid = np.ones(cand.shape[:2], bool)
+        counts = np.full(n_tasks, self.n_samples)
+        sels = select_batch(self.model, tasks.net_idx, cand, valid, counts,
+                            tasks.lat_obj, tasks.pow_obj)
+        per_task = (time.time() - t0) / n_tasks
+        return [
+            DSEResult(sel, float(tasks.lat_obj[i]), float(tasks.pow_obj[i]),
+                      per_task)
+            for i, sel in enumerate(sels)
+        ]

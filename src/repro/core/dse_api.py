@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
@@ -52,8 +52,41 @@ class DSEResult:
         return self.selection.improvement_ratio(self.lat_obj, self.pow_obj)
 
 
+@runtime_checkable
+class DSEMethod(Protocol):
+    """What every DSE engine speaks — GANDSE and all baselines.
+
+    The comparison harness (experiments/run_comparison.py) and Table-5
+    benchmarks treat methods uniformly through this protocol:
+
+    - ``train(n_data, iters, seed=, ds=, log_every=)``: fit on a (shared)
+      dataset; model-free methods (SA, random search) accept the call as a
+      no-op so one loop drives every method.
+    - ``explore(net_idx, lat_obj, pow_obj, seed=)``: one DSE task ->
+      ``DSEResult``.
+    - ``explore_tasks(tasks, seed=)``: a task batch -> ``List[DSEResult]``.
+      Methods with a device route serve the batch in one dispatch chain and
+      fall back to the sequential host loop for models without a jnp oracle
+      (the ``use_jax_oracle`` rule).
+    """
+
+    model: DesignModel
+    method_name: str
+
+    def train(self, n_data: int, iters: int, seed: int = 0,
+              ds: Optional[Dataset] = None, log_every: int = 0): ...
+
+    def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
+                seed: int = 0) -> "DSEResult": ...
+
+    def explore_tasks(self, tasks: DSETask, seed: int = 0
+                      ) -> List["DSEResult"]: ...
+
+
 class GANDSE:
     """End-to-end framework object for one design template (design model)."""
+
+    method_name = "GANDSE"
 
     def __init__(self, model: DesignModel, gan_cfg: Optional[G.GANConfig] = None,
                  explorer_cfg: Optional[ExplorerConfig] = None):

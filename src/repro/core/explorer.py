@@ -43,6 +43,21 @@ class ExplorerConfig:
     noise_samples: int = 1     # forward passes with independent noise
 
 
+def task_keys(seed: int, n: int) -> jnp.ndarray:
+    """Per-task noise keys: row t is PRNGKey(seed + t), summed in host int64.
+
+    The sum must not happen in device int32: Python-int seeds >= 2**31 raise
+    OverflowError at dispatch, and in-range seeds whose sum crosses 2**31
+    wrap mod 2**32 — aliasing task keys with those of other (wrapped) seeds.
+    Masking the int64 sum to its low 32 bits before PRNGKey is bitwise
+    identical to the legacy int32 route for every seed it accepted
+    (including negatives), while keeping any int64 seed valid and collision
+    -free within a batch.
+    """
+    seeds = (np.arange(n, dtype=np.int64) + int(seed)) & np.int64(0xFFFFFFFF)
+    return jax.vmap(jax.random.PRNGKey)(seeds.astype(np.uint32))
+
+
 def _employed_choices(probs_g: np.ndarray, thresh: float) -> List[np.ndarray]:
     """Per group: indices of choices above threshold (argmax always kept)."""
     out = []
@@ -260,12 +275,13 @@ class Explorer:
 
         Task row t draws its noise from PRNGKey(seed + t), so row t is
         bitwise-equal to a single-task call with seed + t — batching a task
-        never changes its candidates.
+        never changes its candidates.  The sum runs in host int64 (see
+        `task_keys`) so large seeds neither raise nor alias.
         """
         net_enc = self.ds.net_encoded(self.model, np.atleast_2d(net_idx))
         obj_enc = self.ds.obj_encoded(np.atleast_1d(lat_obj),
                                       np.atleast_1d(pow_obj))
-        keys = jax.vmap(jax.random.PRNGKey)(seed + jnp.arange(net_enc.shape[0]))
+        keys = task_keys(seed, net_enc.shape[0])
         return self._fwd(self.g_params, jnp.asarray(net_enc),
                          jnp.asarray(obj_enc), keys,
                          n_samples=self.cfg.noise_samples)

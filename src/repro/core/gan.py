@@ -84,8 +84,14 @@ def discriminator_apply(params, net_enc, cfg_onehot, obj_enc,
     return L.mlp_apply(params, x, use_fused=use_fused)
 
 
+def sample_noise_dim(rng, batch: int, noise_dim: int):
+    """The canonical noise input ("small random numbers"): shared by G and
+    the Large-MLP baseline, which §7.1.4 feeds the same noise as G."""
+    return jax.random.uniform(rng, (batch, noise_dim), jnp.float32, -0.1, 0.1)
+
+
 def sample_noise(rng, batch: int, cfg: GANConfig):
-    return jax.random.uniform(rng, (batch, cfg.noise_dim), jnp.float32, -0.1, 0.1)
+    return sample_noise_dim(rng, batch, cfg.noise_dim)
 
 
 # ---------------------------------------------------------------------------

@@ -47,6 +47,22 @@ class Selection:
                                     + ((self.power - po) / po) ** 2)))
 
 
+#: the paper allows 1% noise when judging satisfaction (§7.2); shared by
+#: every DSE method (selector routes, SA, DRL) so the Table-5 comparison
+#: judges all of them by the same tolerance
+NOISE_TOL = 0.01
+
+
+def is_satisfied(lat: float, pw: float, lo: float, po: float,
+                 noise_tol: float = NOISE_TOL) -> bool:
+    """§7.2 satisfaction: both metrics within (1 + noise_tol) of the
+    objectives; non-finite metrics never satisfy.  The single definition
+    every DSE method reports through."""
+    return bool(np.isfinite(lat) and np.isfinite(pw)
+                and lat <= lo * (1 + noise_tol)
+                and pw <= po * (1 + noise_tol))
+
+
 #: auto-route cutover: below this candidate count the host numpy loop is
 #: faster than dispatching the jitted scan (see `select` docstring)
 _JAX_MIN_CANDIDATES = 512
@@ -139,8 +155,8 @@ def _select_jax(
     lat64, pw64 = model.evaluate_indices(net_idx[None], cand_idx[chosen][None])
     l_opt, p_opt = float(lat64[0]), float(pw64[0])
     lo, po = float(lat_obj), float(pow_obj)
-    satisfied = (l_opt <= lo * (1 + noise_tol)) and (p_opt <= po * (1 + noise_tol))
-    return Selection(cand_idx[chosen].copy(), l_opt, p_opt, bool(satisfied), n)
+    satisfied = is_satisfied(l_opt, p_opt, lo, po, noise_tol)
+    return Selection(cand_idx[chosen].copy(), l_opt, p_opt, satisfied, n)
 
 
 def select(
@@ -149,7 +165,7 @@ def select(
     cand_idx: np.ndarray,
     lat_obj: float,
     pow_obj: float,
-    noise_tol: float = 0.01,
+    noise_tol: float = NOISE_TOL,
     use_jax: Optional[bool] = None,
 ) -> Selection:
     """Run Algorithm 2 over the candidate set for one DSE task.
@@ -197,12 +213,12 @@ def select(
 
     if chosen < 0:
         return Selection(None, np.inf, np.inf, False, int(cand_idx.shape[0]))
-    satisfied = (l_opt <= lo * (1 + noise_tol)) and (p_opt <= po * (1 + noise_tol))
+    satisfied = is_satisfied(l_opt, p_opt, lo, po, noise_tol)
     return Selection(
         cfg_idx=cand_idx[chosen].copy(),
         latency=l_opt,
         power=p_opt,
-        satisfied=bool(satisfied),
+        satisfied=satisfied,
         n_candidates=int(cand_idx.shape[0]),
     )
 
@@ -215,7 +231,7 @@ def select_batch(
     n_candidates: np.ndarray,
     lat_obj: np.ndarray,
     pow_obj: np.ndarray,
-    noise_tol: float = 0.01,
+    noise_tol: float = NOISE_TOL,
 ) -> List[Selection]:
     """Batched device Algorithm 2 over a padded candidate tensor.
 
@@ -256,8 +272,7 @@ def select_batch(
             continue
         l_opt, p_opt = float(lat64[k]), float(pw64[k])
         k += 1
-        satisfied = (l_opt <= lo[t] * (1 + noise_tol)
-                     and p_opt <= po[t] * (1 + noise_tol))
+        satisfied = is_satisfied(l_opt, p_opt, lo[t], po[t], noise_tol)
         out.append(Selection(cand_host[t, chosen[t]].copy(), l_opt, p_opt,
-                             bool(satisfied), n))
+                             satisfied, n))
     return out

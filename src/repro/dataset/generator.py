@@ -25,8 +25,8 @@ class Dataset:
     cfg_idx: np.ndarray        # (N, n_cfg_dims) int
     latency: np.ndarray        # (N,) seconds (raw)
     power: np.ndarray          # (N,) watts   (raw)
-    lat_norm: Normalizer       # std normalizer for latency
-    pow_norm: Normalizer       # std normalizer for power
+    lat_norm: Normalizer       # std normalizer for log2(latency)
+    pow_norm: Normalizer       # std normalizer for log2(power)
     net_norm: Normalizer       # std normalizer for log2(net params)
 
     @property
@@ -40,8 +40,13 @@ class Dataset:
         return self.net_norm(binary_log2_encode(vals)).astype(np.float32)
 
     def obj_encoded(self, lat: np.ndarray, pow_: np.ndarray):
-        lo = self.lat_norm(np.asarray(lat)[..., None])
-        po = self.pow_norm(np.asarray(pow_)[..., None])
+        """Objectives on the same scale-free log2 ("binary number") encoding
+        as the net params (§6.1 encodes both identically).  Raw metrics span
+        5-7 decades on every design model, so std-normalizing them directly
+        collapses almost all objectives to ~0 and the conditional G loses
+        its conditioning signal."""
+        lo = self.lat_norm(binary_log2_encode(np.asarray(lat)[..., None]))
+        po = self.pow_norm(binary_log2_encode(np.asarray(pow_)[..., None]))
         return np.concatenate([lo, po], axis=-1).astype(np.float32)
 
 
@@ -84,8 +89,8 @@ def generate_dataset(
         cfg_idx=cfg_idx,
         latency=lat,
         power=pw,
-        lat_norm=Normalizer.fit(lat[:, None]),
-        pow_norm=Normalizer.fit(pw[:, None]),
+        lat_norm=Normalizer.fit(binary_log2_encode(lat[:, None]), center=True),
+        pow_norm=Normalizer.fit(binary_log2_encode(pw[:, None]), center=True),
         net_norm=Normalizer.fit(binary_log2_encode(net_vals), center=True),
     )
 

@@ -1,0 +1,299 @@
+"""Baseline repairs + the device-resident comparison-harness contracts.
+
+Pins the four bugfixes (MLP seed, SA violation guard, DRL reward clip,
+explorer key overflow — the last in test_explore_batch.py) and the
+batched-vs-sequential parity of every baseline's ``explore_tasks``,
+including zero-feasible tasks and the host fallback for models without a
+jnp oracle.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines.drl import VIOL_CLIP, PolicyGradientDRL
+from repro.baselines.drl import _violation as drl_violation
+from repro.baselines.mlp import LargeMLP
+from repro.baselines.random_search import RandomSearch
+from repro.baselines.sa import _BIG, SimulatedAnnealing
+from repro.baselines.sa import _violation as sa_violation
+from repro.core.dse_api import DSEMethod, GANDSE
+from repro.core.explorer import ExplorerConfig
+from repro.dataset.generator import DSETask, generate_tasks
+from repro.design_models.base import DesignModel
+from repro.design_models.dnnweaver import DnnWeaverModel
+
+
+class _InfeasibleModel(DnnWeaverModel):
+    """Every config infeasible: the zero-feasible edge case."""
+
+    name = "dnnweaver_infeasible"
+
+    def evaluate(self, net, config):
+        lat, pw = super().evaluate(net, config)
+        return np.full_like(lat, np.inf), np.full_like(pw, np.inf)
+
+    def evaluate_jax(self, net, config):
+        lat, pw = super().evaluate_jax(net, config)
+        return jnp.full_like(lat, jnp.inf), jnp.full_like(pw, jnp.inf)
+
+
+class _HostOnlyModel(DnnWeaverModel):
+    """jnp oracle hidden: exercises the sequential host fallback."""
+
+    name = "dnnweaver_host_only"
+    evaluate_jax = DesignModel.evaluate_jax
+
+
+class _InfPowerModel(DnnWeaverModel):
+    """Finite latency everywhere, power = +inf unless PEN == 4 (its first
+    choice): the finite-latency/non-finite-power corruption case."""
+
+    name = "dnnweaver_inf_power"
+    evaluate_jax = DesignModel.evaluate_jax
+
+    def evaluate(self, net, config):
+        lat, pw = super().evaluate(net, config)
+        lat = np.where(np.isfinite(lat), lat, 1.0)
+        pw = np.where(np.asarray(config)[..., 0] == 4.0, pw, np.inf)
+        return lat, pw
+
+
+@pytest.fixture(scope="module")
+def model():
+    return DnnWeaverModel()
+
+
+@pytest.fixture(scope="module")
+def tasks(model):
+    return generate_tasks(model, 4, seed=2)
+
+
+@pytest.fixture(scope="module")
+def mlp(model, small_dataset):
+    m = LargeMLP(model, hidden_layers=1, neurons=32,
+                 explorer_cfg=ExplorerConfig(prob_threshold=0.1,
+                                             max_candidates=128))
+    m.train(n_data=0, iters=1, seed=0, ds=small_dataset(model, n=256))
+    return m
+
+
+@pytest.fixture(scope="module")
+def drl(model, small_dataset):
+    m = PolicyGradientDRL(model, hidden_layers=1, neurons=32, rollout_len=8,
+                          batch_tasks=16)
+    m.train(n_data=0, iters=2, seed=0, ds=small_dataset(model, n=256))
+    return m
+
+
+def _assert_selection_equal(name, i, sa, sb):
+    assert sa.n_candidates == sb.n_candidates, (name, i)
+    assert (sa.cfg_idx is None) == (sb.cfg_idx is None), (name, i)
+    if sa.cfg_idx is not None:
+        np.testing.assert_array_equal(sa.cfg_idx, sb.cfg_idx,
+                                      err_msg=f"{name}[{i}]")
+    assert sa.latency == sb.latency and sa.power == sb.power, (name, i)
+    assert sa.satisfied == sb.satisfied, (name, i)
+
+
+# ---------------------------------------------------------------------------
+# DSEMethod protocol
+# ---------------------------------------------------------------------------
+def test_all_methods_speak_the_protocol(model):
+    methods = (GANDSE(model), LargeMLP(model), PolicyGradientDRL(model),
+               SimulatedAnnealing(model), RandomSearch(model))
+    names = set()
+    for m in methods:
+        assert isinstance(m, DSEMethod), type(m).__name__
+        names.add(m.method_name)
+    assert len(names) == 5
+    # model-free methods accept the shared training call as a no-op
+    assert SimulatedAnnealing(model).train(n_data=0, iters=0) is not None
+    assert RandomSearch(model).train(n_data=0, iters=0) is not None
+
+
+# ---------------------------------------------------------------------------
+# LargeMLP: seed bugfix + batched parity
+# ---------------------------------------------------------------------------
+def test_mlp_explore_honors_seed(mlp, tasks):
+    """`explore` used to ignore `seed` and run a single zero-noise forward;
+    it must now average noise_samples seeded draws like the Explorer."""
+    net, lo, po = tasks.net_idx[0], tasks.lat_obj[0], tasks.pow_obj[0]
+    p0 = np.asarray(mlp.generator_probs_device(net, lo, po, seed=0))
+    p0b = np.asarray(mlp.generator_probs_device(net, lo, po, seed=0))
+    p1 = np.asarray(mlp.generator_probs_device(net, lo, po, seed=1))
+    np.testing.assert_array_equal(p0, p0b)      # same seed: deterministic
+    assert not np.array_equal(p0, p1)           # seeds differ: probs differ
+    a = mlp.explore(net, lo, po, seed=0)
+    b = mlp.explore(net, lo, po, seed=0)
+    _assert_selection_equal("mlp_seed", 0, a.selection, b.selection)
+
+
+def test_mlp_explore_tasks_parity(mlp, tasks):
+    batched = mlp.explore_tasks(tasks, seed=3)
+    seq = mlp.explore_tasks(tasks, seed=3, batched=False)
+    for i, (a, b) in enumerate(zip(batched, seq)):
+        _assert_selection_equal("mlp", i, a.selection, b.selection)
+    assert any(r.selection.cfg_idx is not None for r in batched)
+
+
+def test_mlp_explore_tasks_parity_zero_feasible(mlp, tasks, small_dataset):
+    infeasible = LargeMLP(_InfeasibleModel(), hidden_layers=1, neurons=32,
+                          explorer_cfg=mlp.explorer_cfg)
+    infeasible.ds = small_dataset(DnnWeaverModel(), n=256)
+    infeasible.params = mlp.params          # same space: params are shared
+    batched = infeasible.explore_tasks(tasks, seed=3)
+    seq = infeasible.explore_tasks(tasks, seed=3, batched=False)
+    for i, (a, b) in enumerate(zip(batched, seq)):
+        _assert_selection_equal("mlp_inf", i, a.selection, b.selection)
+        assert a.selection.cfg_idx is None and not a.selection.satisfied
+        assert a.selection.n_candidates > 0
+
+
+# ---------------------------------------------------------------------------
+# SimulatedAnnealing: violation guard bugfix + batched parity
+# ---------------------------------------------------------------------------
+def test_sa_violation_guards_both_metrics():
+    """Only latency was guarded: finite-latency/non-finite-power configs
+    leaked inf/NaN into the accept/best comparisons (NaN power even scored
+    as zero violation, i.e. 'satisfied')."""
+    assert sa_violation(1.0, np.inf, 1.0, 1.0) == _BIG
+    assert sa_violation(1.0, np.nan, 1.0, 1.0) == _BIG
+    assert sa_violation(np.nan, 1.0, 1.0, 1.0) == _BIG
+    assert sa_violation(1.0, 1.0, 2.0, 2.0) == 0.0
+
+
+def test_sa_escapes_infeasible_power_region(model):
+    """With every non-PEN=4 config at power=+inf, the pre-fix accept rule
+    compared inf/NaN energies and froze on its (infeasible) initial config
+    forever; the guarded violation random-walks out and satisfies."""
+    stub = _InfPowerModel()
+    rng = np.random.default_rng(0)
+    net = stub.net_space.sample_indices(rng, 1)[0]
+    # generous objectives: any feasible (PEN=4) config satisfies them
+    all_cfg = np.stack(np.meshgrid(
+        *[np.arange(d.n) for d in stub.space.dims], indexing="ij"),
+        axis=-1).reshape(-1, stub.space.n_dims)
+    lat, pw = stub.evaluate_indices(np.broadcast_to(net, (len(all_cfg), net.size)),
+                                    all_cfg)
+    ok = np.isfinite(pw)
+    assert ok.any()
+    lo = float(lat[ok].max() * 1.05)
+    po = float(pw[ok].max() * 1.05)
+    res = SimulatedAnnealing(stub).explore(net, lo, po, seed=7)
+    assert res.satisfied
+    assert res.selection.cfg_idx[0] == 0        # found the PEN=4 region
+    assert np.isfinite(res.selection.power)
+
+
+def test_sa_explore_tasks_parity(model, tasks):
+    sa = SimulatedAnnealing(model)
+    batched = sa.explore_tasks(tasks, seed=5)
+    for i in range(len(batched)):
+        r = sa.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
+                       seed=5 + i)
+        _assert_selection_equal("sa", i, batched[i].selection, r.selection)
+    assert all(r.selection.cfg_idx is not None for r in batched)
+
+
+def test_sa_explore_tasks_parity_zero_feasible(tasks):
+    sa = SimulatedAnnealing(_InfeasibleModel())
+    batched = sa.explore_tasks(tasks, seed=5)
+    for i in range(len(batched)):
+        r = sa.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
+                       seed=5 + i)
+        _assert_selection_equal("sa_inf", i, batched[i].selection, r.selection)
+        # SA reports its best visited config even when nothing is feasible
+        assert batched[i].selection.cfg_idx is not None
+        assert not batched[i].selection.satisfied
+        assert batched[i].selection.latency == np.inf
+        # every proposal was evaluated: no early satisfied exit
+        assert batched[i].selection.n_candidates == sa.max_steps + 1
+
+
+# ---------------------------------------------------------------------------
+# PolicyGradientDRL: reward clip bugfix + batched parity
+# ---------------------------------------------------------------------------
+def test_drl_rewards_are_bounded():
+    """nan_to_num used to map infeasible configs to ~1e9 violation, so one
+    infeasible->feasible step rewarded ~1e9 and swamped the moving baseline
+    and advantage normalization; violations now clip at VIOL_CLIP/metric."""
+    lo = po = np.array([1.0])
+    v_inf = drl_violation(np.array([np.inf]), np.array([np.inf]), lo, po)
+    assert float(v_inf[0]) == 2 * VIOL_CLIP
+    # NaN used to count as ZERO violation (nan_to_num(nan=0.0) undershot lo)
+    v_nan = drl_violation(np.array([np.nan]), np.array([1.0]), lo, po)
+    assert float(v_nan[0]) == VIOL_CLIP
+    # worst one-step reward: most-infeasible -> satisfied (+ bonus)
+    sat_bonus = PolicyGradientDRL.sat_bonus
+    reward = float(v_inf[0] - 0.0) + sat_bonus * 1.0
+    assert reward == 2 * VIOL_CLIP + sat_bonus == 22.0
+    # feasible metrics are exact below the clip
+    v = drl_violation(np.array([1.5]), np.array([3.0]), np.array([1.0]),
+                      np.array([2.0]))
+    assert np.isclose(float(v[0]), 0.5 + 0.5)
+
+
+def test_drl_explore_tasks_parity(drl, tasks):
+    batched = drl.explore_tasks(tasks, seed=4)
+    for i in range(len(batched)):
+        r = drl.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
+                        seed=4 + i)
+        _assert_selection_equal("drl", i, batched[i].selection, r.selection)
+        assert batched[i].selection.n_candidates == drl.rollout_len + 1
+
+
+def test_drl_explore_tasks_parity_zero_feasible(drl, tasks, small_dataset):
+    inf_drl = PolicyGradientDRL(_InfeasibleModel(), hidden_layers=1,
+                                neurons=32, rollout_len=8)
+    inf_drl.ds = small_dataset(DnnWeaverModel(), n=256)
+    inf_drl.params = drl.params
+    batched = inf_drl.explore_tasks(tasks, seed=4)
+    for i in range(len(batched)):
+        r = inf_drl.explore(tasks.net_idx[i], tasks.lat_obj[i],
+                            tasks.pow_obj[i], seed=4 + i)
+        _assert_selection_equal("drl_inf", i, batched[i].selection,
+                                r.selection)
+        assert not batched[i].selection.satisfied
+        assert batched[i].selection.latency == np.inf
+
+
+# ---------------------------------------------------------------------------
+# RandomSearch: batched parity
+# ---------------------------------------------------------------------------
+def test_random_search_explore_tasks_parity(model, tasks):
+    rs = RandomSearch(model, n_samples=64)
+    batched = rs.explore_tasks(tasks, seed=6)
+    seq = rs.explore_tasks(tasks, seed=6, batched=False)
+    for i, (a, b) in enumerate(zip(batched, seq)):
+        _assert_selection_equal("rs", i, a.selection, b.selection)
+
+
+# ---------------------------------------------------------------------------
+# host fallback (models without a jnp oracle)
+# ---------------------------------------------------------------------------
+def test_baselines_fall_back_without_jax_oracle(mlp, drl, tasks,
+                                                small_dataset):
+    host = _HostOnlyModel()
+    assert not host.has_jax_oracle
+    ds = small_dataset(DnnWeaverModel(), n=256)
+
+    m = LargeMLP(host, hidden_layers=1, neurons=32,
+                 explorer_cfg=mlp.explorer_cfg)
+    m.ds, m.params = ds, mlp.params
+    d = PolicyGradientDRL(host, hidden_layers=1, neurons=32, rollout_len=8)
+    d.ds, d.params = ds, drl.params
+    sa = SimulatedAnnealing(host)
+    rs = RandomSearch(host, n_samples=32)
+    for name, method in [("mlp", m), ("drl", d), ("sa", sa), ("rs", rs)]:
+        res = method.explore_tasks(tasks, seed=9)
+        assert len(res) == tasks.net_idx.shape[0], name
+        assert all(np.isfinite(r.dse_seconds) for r in res), name
+        # even a FORCED batched route falls back (the GANDSE rule), rather
+        # than crashing inside jit on the missing jnp oracle
+        forced = method.explore_tasks(tasks, seed=9, batched=True)
+        for i, (a, b) in enumerate(zip(forced, res)):
+            _assert_selection_equal(f"{name}_forced", i, a.selection,
+                                    b.selection)
+    # the host fallback still finds configurations
+    assert all(r.selection.cfg_idx is not None
+               for r in sa.explore_tasks(tasks, seed=9))
