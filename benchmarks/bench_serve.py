@@ -1,0 +1,153 @@
+"""Serving throughput benchmark: micro-batched vs one-request-at-a-time.
+
+The paper's "negligible DSE time" (Table 5) is a per-query number; the
+ROADMAP north star is sustained throughput under many concurrent queries.
+This bench pushes 64 in-flight requests through two `DSEServer` instances
+over the same engine (im2col space, >= 1024 candidates per task):
+
+- **sequential**: ``max_batch=1`` — the one-request-at-a-time serving
+  loop (one dispatch chain per request, the Table-5 measurement mode);
+- **batched**: ``max_batch=64`` — the requests coalesce into one pow2
+  -bucketed micro-batch per drain.
+
+  PYTHONPATH=src python benchmarks/bench_serve.py [--quick]
+
+Requests carry unique seeds and the result cache is disabled, so both
+servers do all 64 explorations for real.  Timings are interleaved min-of
+-trials after a warmup pass.  Acceptance bar: batched >= 3x sequential.
+The script exits nonzero otherwise and appends each run to the repo-root
+``BENCH_serve.json`` trajectory (latest copy in
+``results/serve_throughput.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.core import gan as G
+from repro.core.dse_api import GANDSE
+from repro.core.explorer import ExplorerConfig
+from repro.dataset.generator import generate_dataset, generate_tasks
+from repro.design_models.im2col import Im2colModel
+from repro.serve import DSEServer, ServeConfig
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+TRAJECTORY = os.environ.get("REPRO_BENCH_TRAJECTORY", "BENCH_serve.json")
+
+N_REQUESTS = 64
+
+
+def build(quick: bool):
+    """Random-init G at serving scale (same rationale as
+    bench_explore_throughput: throughput depends on dispatch structure,
+    not training quality)."""
+    model = Im2colModel()
+    layers, neurons = (1, 64) if quick else (2, 256)
+    cfg = G.GANConfig(n_net=model.net_space.n_dims).scaled(
+        layers=layers, neurons=neurons, batch_size=64)
+    # threshold below uniform employs every choice; trim caps the product in
+    # (cap/2, cap], so cap=2048 guarantees > 1024 candidates per task
+    engine = GANDSE(model, cfg, ExplorerConfig(prob_threshold=0.01,
+                                               max_candidates=2048))
+    ds = generate_dataset(model, 512, seed=0)
+    engine.attach(ds, G.init_generator(jax.random.PRNGKey(3), cfg, model.space))
+    tasks = generate_tasks(model, N_REQUESTS, seed=2)
+    return engine, tasks
+
+
+def make_server(engine, max_batch: int) -> DSEServer:
+    # cache off: both modes must do all the work every trial
+    srv = DSEServer(ServeConfig(max_batch=max_batch, cache_capacity=0))
+    srv.register(engine)
+    return srv
+
+
+def push(srv: DSEServer, engine, tasks, seed0: int) -> float:
+    """Submit all requests (unique seeds), drain, return the wall time."""
+    n = len(tasks)
+    t0 = time.perf_counter()
+    for i in range(n):
+        srv.submit(engine.model.name, tasks.net_idx[i], tasks.lat_obj[i],
+                   tasks.pow_obj[i], seed=seed0 + i)
+    resp = srv.drain()
+    dt = time.perf_counter() - t0
+    assert len(resp) == n, (len(resp), n)
+    return dt
+
+
+def run(quick: bool = False) -> Dict:
+    engine, tasks = build(quick)
+    seq = make_server(engine, max_batch=1)
+    bat = make_server(engine, max_batch=N_REQUESTS)
+
+    # warmup / compile both serving routes; check the candidate-count floor
+    push(bat, engine, tasks, seed0=0)
+    push(seq, engine, tasks, seed0=0)
+    n_cands = [bat.response(r).result.selection.n_candidates
+               for r in range(N_REQUESTS)]
+    assert min(n_cands) >= 1024, f"scale check failed: min {min(n_cands)}"
+
+    trials = 2 if quick else 3
+    best = {"batched": float("inf"), "sequential": float("inf")}
+    for _ in range(trials):                    # interleaved: noise-robust
+        best["batched"] = min(best["batched"], push(bat, engine, tasks, 0))
+        best["sequential"] = min(best["sequential"], push(seq, engine, tasks, 0))
+
+    out = {
+        "n_requests": N_REQUESTS,
+        "n_candidates_min": int(min(n_cands)),
+        "n_candidates_mean": float(np.mean(n_cands)),
+        "sequential_s": best["sequential"],
+        "batched_s": best["batched"],
+        "req_per_s_sequential": N_REQUESTS / best["sequential"],
+        "req_per_s_batched": N_REQUESTS / best["batched"],
+        "batches_batched": bat.stats["batches"],
+        "speedup": best["sequential"] / best["batched"],
+        "quick": quick,
+    }
+    print(f"[serve] R={N_REQUESTS} cands>={out['n_candidates_min']} "
+          f"seq={out['sequential_s']*1e3:.1f}ms "
+          f"batched={out['batched_s']*1e3:.1f}ms "
+          f"({out['speedup']:.1f}x, {out['req_per_s_batched']:.0f} req/s)",
+          flush=True)
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "serve_throughput.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    traj = []
+    if os.path.exists(TRAJECTORY):
+        with open(TRAJECTORY) as f:
+            traj = json.load(f)
+    traj.append(out)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(traj, f, indent=1)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale: smaller G, fewer trials (same "
+                         "64-request scale)")
+    ap.add_argument("--min-speedup", type=float, default=3.0,
+                    help="fail below this batched-vs-sequential ratio; use "
+                         "a loose bound (e.g. 1.5) on noisy shared runners")
+    args = ap.parse_args(argv)
+    out = run(quick=args.quick)
+    if out["speedup"] < args.min_speedup:
+        print(f"FAIL: micro-batched serving only {out['speedup']:.2f}x faster "
+              f"(< {args.min_speedup:g}x bar)")
+        return 1
+    print(f"ok: micro-batched serving {out['speedup']:.1f}x faster than the "
+          f"one-request-at-a-time loop (>= {args.min_speedup:g}x bar)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

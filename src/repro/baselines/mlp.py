@@ -28,7 +28,7 @@ from repro.core import gan as G
 from repro.core.explorer import (ExplorerConfig, enumerate_candidates,
                                  enumerate_candidates_batch, task_keys)
 from repro.core.selector import select, select_batch
-from repro.core.dse_api import DSEResult
+from repro.core.dse_api import DSEResult, row_seeds
 from repro.core.train import encode_batch
 from repro.dataset.generator import Dataset, DSETask, generate_dataset
 from repro.design_models.base import DesignModel
@@ -199,7 +199,8 @@ class LargeMLP:
             return self.explore_batch(tasks, seed=seed)
         return self._explore_seq(tasks, seed)
 
-    def _explore_seq(self, tasks: DSETask, seed: int) -> List[DSEResult]:
+    def _explore_seq(self, tasks: DSETask, seed) -> List[DSEResult]:
+        seeds = row_seeds(seed, tasks.net_idx.shape[0])
         return [self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
-                             seed=seed + i)
+                             seed=int(seeds[i]))
                 for i in range(tasks.net_idx.shape[0])]

@@ -18,7 +18,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.selector import select, select_batch
-from repro.core.dse_api import DSEResult
+from repro.core.dse_api import DSEResult, row_seeds
 from repro.dataset.generator import Dataset, DSETask
 from repro.design_models.base import DesignModel
 
@@ -55,14 +55,16 @@ class RandomSearch:
         n_tasks = int(tasks.net_idx.shape[0])
         if n_tasks == 0:
             return []
+        seeds = row_seeds(seed, n_tasks)
         if not batched:
             return [self.explore(tasks.net_idx[i], tasks.lat_obj[i],
-                                 tasks.pow_obj[i], seed=seed + i)
+                                 tasks.pow_obj[i], seed=int(seeds[i]))
                     for i in range(n_tasks)]
         t0 = time.time()
-        # task t samples from default_rng(seed + t): same candidate sets as
+        # task t samples from default_rng(seeds[t]): same candidate sets as
         # the sequential route, whatever the batch composition
-        cand = np.stack([self._candidates(seed + t) for t in range(n_tasks)])
+        cand = np.stack([self._candidates(int(seeds[t]))
+                         for t in range(n_tasks)])
         valid = np.ones(cand.shape[:2], bool)
         counts = np.full(n_tasks, self.n_samples)
         sels = select_batch(self.model, tasks.net_idx, cand, valid, counts,

@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core.explorer import task_keys
 from repro.core.selector import Selection, is_satisfied
-from repro.core.dse_api import DSEResult
+from repro.core.dse_api import DSEResult, row_seeds
 from repro.dataset.generator import Dataset, DSETask
 from repro.design_models.base import DesignModel
 
@@ -232,9 +232,7 @@ class SimulatedAnnealing:
         # when the device route is requested (the GANDSE fallback rule)
         use_jax = self.model.has_jax_oracle and (use_jax is None or use_jax)
         if use_jax:
-            tasks = DSETask(net_idx=np.atleast_2d(net_idx),
-                            lat_obj=np.atleast_1d(lat_obj),
-                            pow_obj=np.atleast_1d(pow_obj))
+            tasks = DSETask.single(net_idx, lat_obj, pow_obj)
             return self._explore_device(
                 tasks, self.seed if seed is None else seed)[0]
         return self._explore_host(net_idx, lat_obj, pow_obj, seed)
@@ -247,6 +245,8 @@ class SimulatedAnnealing:
             return []
         if batched:
             return self._explore_device(tasks, seed)
+        seeds = row_seeds(seed, n_tasks)
         return [self.explore(tasks.net_idx[i], tasks.lat_obj[i],
-                             tasks.pow_obj[i], seed=seed + i, use_jax=False)
+                             tasks.pow_obj[i], seed=int(seeds[i]),
+                             use_jax=False)
                 for i in range(n_tasks)]

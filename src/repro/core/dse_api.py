@@ -18,7 +18,9 @@ from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from repro.core import gan as G
-from repro.core.explorer import Explorer, ExplorerConfig
+from repro.core.explorer import Explorer, ExplorerConfig, row_seeds  # noqa: F401
+# (row_seeds re-exported: the per-row seed convention lives next to
+# task_keys so the device and host routes cannot drift apart)
 from repro.core.selector import Selection, select, select_batch
 from repro.core.train import TrainState, train_gan
 from repro.dataset.generator import Dataset, DSETask, generate_dataset
@@ -29,11 +31,26 @@ def parse_network(desc: Dict[str, float], model: DesignModel) -> np.ndarray:
     """Parsing phase: {'IC':64, 'OC':32, ...} -> net-space indices.
 
     Values are snapped to the nearest legal sampled value (the dataset
-    generator covers the space evenly, §7.1.2).
+    generator covers the space evenly, §7.1.2), so a second parse of the
+    snapped values is a fixed point.
     """
     names = [d.name for d in model.net_space.dims]
     vals = np.array([[float(desc[n]) for n in names]])
     return model.net_space.indices_from_values(vals)[0]
+
+
+def cache_key(model_name: str, net_idx, lat_obj, pow_obj, seed) -> tuple:
+    """Hashable identity of one DSE task row: what the serving result cache
+    keys on.  Two submissions with equal keys are guaranteed the same
+    Selection by the batched-vs-sequential parity contract (the per-task
+    noise key is PRNGKey(seed), independent of batch placement), so a
+    cached result is indistinguishable from a recompute — until the
+    engine's params change (`DSEServer.swap` invalidates the model's
+    entries).
+    """
+    return (str(model_name),
+            tuple(int(v) for v in np.asarray(net_idx).reshape(-1)),
+            float(lat_obj), float(pow_obj), int(seed))
 
 
 @dataclasses.dataclass
@@ -67,7 +84,10 @@ class DSEMethod(Protocol):
     - ``explore_tasks(tasks, seed=)``: a task batch -> ``List[DSEResult]``.
       Methods with a device route serve the batch in one dispatch chain and
       fall back to the sequential host loop for models without a jnp oracle
-      (the ``use_jax_oracle`` rule).
+      (the ``use_jax_oracle`` rule).  ``seed`` is a scalar (row t explores
+      with seed + t) or a (T,) per-row seed array — the array form is how
+      the serving layer keeps coalesced requests' results independent of
+      micro-batch placement.
     """
 
     model: DesignModel
@@ -133,7 +153,8 @@ class GANDSE:
         """Batched device-resident exploration: vmapped G inference ->
         on-device candidate enumeration -> batched Algorithm 2, one dispatch
         chain for the whole task batch.  Task i returns the same Selection
-        as ``explore(tasks.net_idx[i], ..., seed=seed + i)`` — identical
+        as ``explore(tasks.net_idx[i], ..., seed=seed + i)`` — or
+        ``seed=seed[i]`` when ``seed`` is a (T,) per-task array — identical
         candidate sets always; the winner too, except when `explore` routes
         a small candidate set through the float64 host loop and two
         near-tied candidates differ by less than float32 resolution (the
@@ -164,17 +185,18 @@ class GANDSE:
         """Explore a task batch.  batched=None (default) routes through
         `explore_batch` whenever the model has a jnp oracle; False forces
         the sequential per-task loop (same results, one dispatch chain per
-        task)."""
+        task).  seed: scalar or (T,) per-task array (see `explore_batch`)."""
         if batched is None:
             batched = self.model.has_jax_oracle
         if batched:
             return self.explore_batch(tasks, seed=seed)
         return self._explore_seq(tasks, seed)
 
-    def _explore_seq(self, tasks: DSETask, seed: int) -> List[DSEResult]:
+    def _explore_seq(self, tasks: DSETask, seed) -> List[DSEResult]:
+        seeds = row_seeds(seed, tasks.net_idx.shape[0])
         return [
             self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
-                         seed=seed + i)
+                         seed=seeds[i])
             for i in range(tasks.net_idx.shape[0])
         ]
 
@@ -195,7 +217,13 @@ class GANDSE:
 
 def summarize(results: Sequence[DSEResult]) -> Dict[str, float]:
     """Table-5-style metrics: satisfied count, improvement ratio, DSE time,
-    candidate count, error stds (Fig. 5)."""
+    candidate count, error stds (Fig. 5).
+
+    Defined (and silent — no numpy RuntimeWarning) for every input: an
+    empty result list reports zero counts/times, and metrics that average
+    over an empty subset (improvement ratio with nothing satisfied, error
+    stds with nothing feasible) report NaN.
+    """
     n = len(results)
     sat = [r for r in results if r.satisfied]
     irs = [r.improvement_ratio for r in sat if r.improvement_ratio is not None]
@@ -207,8 +235,9 @@ def summarize(results: Sequence[DSEResult]) -> Dict[str, float]:
         "n_tasks": n,
         "n_satisfied": len(sat),
         "improvement_ratio": float(np.mean(irs)) if irs else float("nan"),
-        "dse_time_s": float(np.mean([r.dse_seconds for r in results])),
-        "n_candidates": float(np.mean([r.selection.n_candidates for r in results])),
+        "dse_time_s": float(np.mean([r.dse_seconds for r in results])) if n else 0.0,
+        "n_candidates": float(np.mean([r.selection.n_candidates
+                                       for r in results])) if n else 0.0,
         "lat_err_std": float(np.std(lerr)) if lerr else float("nan"),
         "pow_err_std": float(np.std(perr)) if perr else float("nan"),
     }

@@ -43,8 +43,30 @@ class ExplorerConfig:
     noise_samples: int = 1     # forward passes with independent noise
 
 
-def task_keys(seed: int, n: int) -> jnp.ndarray:
-    """Per-task noise keys: row t is PRNGKey(seed + t), summed in host int64.
+def pow2_bucket(n: int, floor: int = 2) -> int:
+    """Smallest power of two >= max(n, floor): the jit-cache bucketing rule
+    shared by candidate padding (``C_pad``), Algorithm 2 padding, and the
+    serve micro-batcher, so every dynamic extent compiles at most
+    log2(max) programs."""
+    return 1 << (max(int(n), floor) - 1).bit_length()
+
+
+def row_seeds(seed, n: int) -> np.ndarray:
+    """THE per-row seed convention, shared by every engine route: a scalar
+    ``seed`` -> seed + arange(n) (row t explores with seed + t); an (n,)
+    array -> as-is (row t explores with seed[t] — how the serve
+    micro-batcher keeps coalesced requests' results independent of batch
+    placement).  Host int64 either way (see `task_keys`)."""
+    if np.ndim(seed) == 0:
+        return np.arange(n, dtype=np.int64) + int(seed)
+    seeds = np.asarray(seed, np.int64).reshape(-1)
+    assert seeds.shape[0] == n, (seeds.shape, n)
+    return seeds
+
+
+def task_keys(seed, n: int) -> jnp.ndarray:
+    """Per-task noise keys: PRNGKey over `row_seeds(seed, n)`, masked in
+    host int64.
 
     The sum must not happen in device int32: Python-int seeds >= 2**31 raise
     OverflowError at dispatch, and in-range seeds whose sum crosses 2**31
@@ -54,7 +76,7 @@ def task_keys(seed: int, n: int) -> jnp.ndarray:
     (including negatives), while keeping any int64 seed valid and collision
     -free within a batch.
     """
-    seeds = (np.arange(n, dtype=np.int64) + int(seed)) & np.int64(0xFFFFFFFF)
+    seeds = row_seeds(seed, n) & np.int64(0xFFFFFFFF)
     return jax.vmap(jax.random.PRNGKey)(seeds.astype(np.uint32))
 
 
@@ -227,7 +249,7 @@ def enumerate_candidates_batch(
     keep, counts, total = masks(jnp.asarray(probs), jnp.float32(thresh),
                                 jnp.int32(max_candidates))
     counts_host = np.asarray(total)
-    c_pad = 1 << max(int(counts_host.max(initial=1)) - 1, 1).bit_length()
+    c_pad = pow2_bucket(int(counts_host.max(initial=1)))
     cand, valid = unravel(keep, counts, total, c_pad)
     return cand, valid, counts_host
 
@@ -273,8 +295,9 @@ class Explorer:
                                seed: int = 0) -> jnp.ndarray:
         """Vmapped G forward: (T, onehot_width) device mean probs.
 
-        Task row t draws its noise from PRNGKey(seed + t), so row t is
-        bitwise-equal to a single-task call with seed + t — batching a task
+        Task row t draws its noise from PRNGKey(seed + t) — or PRNGKey
+        (seed[t]) when ``seed`` is a per-task array — so row t is
+        bitwise-equal to a single-task call with that seed: batching a task
         never changes its candidates.  The sum runs in host int64 (see
         `task_keys`) so large seeds neither raise nor alias.
         """

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.explorer import pow2_bucket
 from repro.design_models.base import DesignModel
 
 
@@ -136,7 +137,7 @@ def _select_jax(
     # accept (n_net_dims,) or (1, n_net_dims) like the host route does
     net_idx = np.asarray(net_idx, np.int32).reshape(-1)
     n = cand_idx.shape[0]
-    n_pad = 1 << max(n - 1, 1).bit_length()     # next pow2: bounds jit cache
+    n_pad = pow2_bucket(n)                      # next pow2: bounds jit cache
     valid = np.zeros(n_pad, bool)
     valid[:n] = True
     pad = np.zeros((n_pad - n, cand_idx.shape[1]), cand_idx.dtype)

@@ -8,7 +8,7 @@ normalized by the standard deviation (Tables 2-3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -52,11 +52,43 @@ class Dataset:
 
 @dataclasses.dataclass
 class DSETask:
-    """One DSE task: a network + the user's objectives `metric <= x` (§5)."""
+    """One DSE task batch: networks + the user's objectives `metric <= x`
+    (§5).  Row-wise slicing (`take`) and `concat` are what the serve
+    micro-batcher uses to coalesce independent in-flight requests into one
+    dispatchable batch and to pad it to a pow2 bucket."""
 
     net_idx: np.ndarray        # (T, n_net_dims)
     lat_obj: np.ndarray        # (T,) seconds
     pow_obj: np.ndarray        # (T,) watts
+
+    def __len__(self) -> int:
+        return int(np.asarray(self.net_idx).shape[0])
+
+    def take(self, idx) -> "DSETask":
+        """Row gather: idx is any numpy fancy index (ints, slice, bool
+        mask).  Repeated indices are allowed — the batcher pads a
+        micro-batch to its pow2 bucket by repeating the last row."""
+        idx = np.asarray(idx)
+        return DSETask(net_idx=np.atleast_2d(self.net_idx[idx]),
+                       lat_obj=np.atleast_1d(self.lat_obj[idx]),
+                       pow_obj=np.atleast_1d(self.pow_obj[idx]))
+
+    @staticmethod
+    def concat(tasks: "Sequence[DSETask]") -> "DSETask":
+        """Row-wise concatenation of task batches (coalescing)."""
+        assert len(tasks) > 0, "concat of zero task batches"
+        return DSETask(
+            net_idx=np.concatenate([np.atleast_2d(t.net_idx) for t in tasks]),
+            lat_obj=np.concatenate([np.atleast_1d(t.lat_obj) for t in tasks]),
+            pow_obj=np.concatenate([np.atleast_1d(t.pow_obj) for t in tasks]),
+        )
+
+    @staticmethod
+    def single(net_idx: np.ndarray, lat_obj: float, pow_obj: float) -> "DSETask":
+        """One request -> a 1-row task batch."""
+        return DSETask(net_idx=np.atleast_2d(np.asarray(net_idx)),
+                       lat_obj=np.atleast_1d(np.asarray(lat_obj, np.float64)),
+                       pow_obj=np.atleast_1d(np.asarray(pow_obj, np.float64)))
 
 
 def generate_dataset(

@@ -37,19 +37,80 @@ class Request:
     done: bool = False
 
 
+def _recurrent_template(states, m):
+    """The recurrent (ssm / xLSTM) portion of a freshly-initialized decode
+    state, per segment/spec; None where a spec carries no recurrent state.
+    Holding these leaves is cheap — KV caches are excluded (the per-lane
+    `start` mask handles them), and at init time they alias the live
+    state."""
+    out = []
+    for seg_st, seg in zip(states, m.segments):
+        out.append([
+            (st.get("ssm") if isinstance(st, dict) else None)
+            if spec.kind in ("dense", "dec") else st
+            for st, spec in zip(seg_st, seg.pattern)
+        ])
+    return out
+
+
+def _reset_recurrent_lane(states, fresh, m, lane: int):
+    """Re-initialize lane `lane` of the per-lane recurrent decode state
+    when its batch slot is reused for a new request, by scattering the
+    lane slice of the canonical fresh state (`_recurrent_template`) — one
+    source of truth with `spec_state_init`/`ssm_decode_init`, whatever
+    their init constants.  State leaves are stacked (repeats, batch, ...),
+    so lane resets index axis 1.  KV caches need no copy: the per-lane
+    `start` mask passed to the decode step hides a reused lane's stale
+    entries (see `decode_attention`)."""
+    def scatter(st, fr):
+        return jax.tree.map(lambda a, f: a.at[:, lane].set(f[:, lane]),
+                            st, fr)
+
+    new_states = []
+    for seg_st, seg_fr, seg in zip(states, fresh, m.segments):
+        new_seg = []
+        for st, fr, spec in zip(seg_st, seg_fr, seg.pattern):
+            if spec.kind in ("dense", "dec"):
+                if fr is not None:
+                    st = dict(st, ssm=scatter(st["ssm"], fr))
+            else:
+                st = scatter(st, fr)
+            new_seg.append(st)
+        new_states.append(new_seg)
+    return new_states
+
+
 class Engine:
-    """Fixed-slot continuous batching engine."""
+    """Fixed-slot continuous batching engine.
+
+    Every decode step advances the shared clock by one: each layer's KV
+    cache writes slot `clock`, and the RoPE position equals the clock, so
+    positions stay monotonic for every stream and relative offsets within
+    a stream are exact.  Reusing a slot for a new request records the
+    admission clock in ``start[slot]``; the decode step masks cache
+    entries before it (the previous occupant's), so a reused slot computes
+    exactly what a fresh engine would.
+    """
 
     def __init__(self, m, params, batch_slots: int, cache_len: int,
                  mesh=None, eos: Optional[int] = None):
         self.m = m
         self.params = params
         self.slots: List[Optional[Request]] = [None] * batch_slots
-        self.pending: List[int] = []           # per-slot prompt cursor
         self.cache_len = cache_len
         self.eos = eos
         self.states = MB.init_decode_state(params, m, batch_slots, cache_len)
-        self.pos = np.zeros(batch_slots, np.int32)
+        self._fresh_recurrent = _recurrent_template(self.states, m)
+        self.pos = np.zeros(batch_slots, np.int32)  # per-slot prompt cursor
+        self.clock = 0                 # == every layer state's `len`
+        # non-windowed attention writes KV at slot `clock`: once the clock
+        # reaches the cache span, writes clamp onto the last slot and decode
+        # is silently wrong — fail loudly instead.  Windowed-only models
+        # (ring buffers) have no such horizon.
+        self._kv_horizon = cache_len if any(
+            sp.kind in ("dense", "dec") and sp.cfg.window is None
+            for seg in m.segments for sp in seg.pattern) else None
+        self.start = np.zeros(batch_slots, np.int32)  # per-slot stream start
         self._decode = jax.jit(TS.make_decode_step(m, mesh=mesh))
         self.queue: List[Request] = []
         self.finished: List[Request] = []
@@ -63,10 +124,12 @@ class Engine:
                 req = self.queue.pop(0)
                 self.slots[i] = req
                 self.pos[i] = 0
-                # reset this slot's state lazily: positions restart, and the
-                # causal mask ignores stale cache beyond `len`
-                self.states = jax.tree.map(
-                    lambda st: st.at[...].set(st) if False else st, self.states)
+                # stale-state reset: mask the previous occupant's KV range
+                # [0, clock) out of this lane's attention, and re-init its
+                # recurrent (ssm/xLSTM) cells
+                self.start[i] = self.clock
+                self.states = _reset_recurrent_lane(
+                    self.states, self._fresh_recurrent, self.m, i)
 
     def step(self):
         """One engine iteration: every active slot advances one token."""
@@ -84,12 +147,19 @@ class Engine:
                 toks[i, 0] = req.out[-1] if req.out else req.prompt[-1]
         if not active:
             return False
-        # NOTE: slots share one `pos` scalar per step in this minimal engine;
-        # we use the max cursor (positions only matter relatively within a
-        # slot's stream since each slot's KV was written at its own steps).
-        pos = jnp.int32(int(self.pos.max()))
+        if self._kv_horizon is not None and self.clock >= self._kv_horizon:
+            raise RuntimeError(
+                f"KV capacity exhausted: engine clock {self.clock} reached "
+                f"cache_len {self._kv_horizon} (global-attention caches are "
+                f"append-only across the engine's whole lifetime); size "
+                f"cache_len for total engine steps, not per-request length")
+        # slots share one position scalar per step: the engine clock.  A
+        # stream admitted at clock t0 sees positions t0..t0+n — offset by
+        # t0 from a fresh engine, which RoPE's relative encoding cancels.
         logits, self.states = self._decode(self.params, jnp.asarray(toks),
-                                           pos, self.states)
+                                           jnp.int32(self.clock), self.states,
+                                           start=jnp.asarray(self.start))
+        self.clock += 1
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for i, req in enumerate(self.slots):
             if req is None:

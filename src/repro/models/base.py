@@ -123,13 +123,16 @@ def spec_state_init(spec: LayerSpec, batch: int, cache_len: int,
     raise ValueError(spec.kind)
 
 
-def spec_decode(params, x1, spec: LayerSpec, pos, state, enc_out=None):
+def spec_decode(params, x1, spec: LayerSpec, pos, state, enc_out=None,
+                start=None):
     cfg = spec.cfg
     if spec.kind == "dense":
         ring = cfg.window is not None
-        return B.block_decode(params, x1, cfg, pos, state, ring=ring)
+        return B.block_decode(params, x1, cfg, pos, state, ring=ring,
+                              start=start)
     if spec.kind == "dec":
-        return B.dec_block_decode(params, x1, enc_out, cfg, pos, state)
+        return B.dec_block_decode(params, x1, enc_out, cfg, pos, state,
+                                  start=start)
     if spec.kind == "mlstm":
         y, st = X.mlstm_apply(params, x1, cfg.n_heads, state=state)
         return x1 + y, st
@@ -274,9 +277,13 @@ def _ssm_params_proto(params, m: ModelCfg, spec: LayerSpec):
 
 
 def decode_step(params, m: ModelCfg, token: jnp.ndarray, pos: jnp.ndarray,
-                states, enc_out: Optional[jnp.ndarray] = None):
+                states, enc_out: Optional[jnp.ndarray] = None, start=None):
     """One-token decode.  token (B, 1) int32; pos scalar int32 (absolute
-    position).  Returns (logits (B, 1, V), new states)."""
+    position).  start: optional (B,) per-lane first valid KV position —
+    the stale-cache mask a continuous-batching engine passes when a batch
+    lane has been reused for a new request (every attention layer shares
+    one timeline, so one vector serves all layers).  Returns
+    (logits (B, 1, V), new states)."""
     x = L.embed_apply(params["embed"], token)
     pos_b = jnp.broadcast_to(jnp.reshape(pos, (1, 1)), (token.shape[0], 1))
     new_states = []
@@ -285,7 +292,8 @@ def decode_step(params, m: ModelCfg, token: jnp.ndarray, pos: jnp.ndarray,
             layer_params, layer_state = per_layer
             new_layer_state = []
             for spec, sp, st in zip(_seg.pattern, layer_params, layer_state):
-                xc, st = spec_decode(sp, xc, spec, pos_b, st, enc_out=enc_out)
+                xc, st = spec_decode(sp, xc, spec, pos_b, st, enc_out=enc_out,
+                                     start=start)
                 new_layer_state.append(st)
             return xc, new_layer_state
 

@@ -258,12 +258,18 @@ def _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block, q_offset):
 
 def decode_attention(q1, k_cache, v_cache, cache_len, *,
                      window: Optional[int] = None,
-                     ring: bool = False) -> jnp.ndarray:
+                     ring: bool = False,
+                     start=None) -> jnp.ndarray:
     """One-token decode: q1 (B, 1, H, D) vs cache (B, Sc, Hkv, D).
 
     cache_len: number of valid cached tokens (new token already written).
     ring=True: the cache is a ring buffer of size `window`; slot i holds
     absolute position p where p % window == i.
+    start: optional (B,) per-lane first valid absolute position — cache
+    entries before it are masked out.  This is the stale-KV mask for
+    continuous-batching engines that reuse a batch lane for a new request
+    (`repro.launch.serve.Engine`): lane b's previous occupant wrote
+    positions < start[b], which must not leak into the new stream.
     """
     b, _, h, d = q1.shape
     _, sc, hkv, _ = k_cache.shape
@@ -278,10 +284,19 @@ def decode_attention(q1, k_cache, v_cache, cache_len, *,
         pos = slot + (jnp.ceil((cur + 1 - slot) / sc)).astype(slot.dtype) * sc - sc
         valid = (pos >= 0) & (pos >= cache_len - window) & (pos <= cur)
     else:
+        pos = slot                       # non-ring: slot == absolute position
         valid = slot < cache_len
         if window is not None:
             valid &= slot >= cache_len - window
-    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    if start is not None:
+        # per-lane mask (B, Sc): a slot whose (attributed) absolute position
+        # precedes the lane's stream start was written by a previous
+        # occupant; masking by position also covers the ring case, where a
+        # stale slot is attributed the newest position that maps to it
+        valid = valid[None, :] & (pos[None, :] >= jnp.reshape(start, (-1, 1)))
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    else:
+        scores = jnp.where(valid[None, None, None], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, 1, h, d).astype(q1.dtype)

@@ -92,16 +92,19 @@ def attn_apply(params, x, cfg: BlockCfg, positions, *, causal: bool = True):
 
 
 def attn_decode(params, x1, cfg: BlockCfg, pos, kv_cache, cache_len, *,
-                ring: bool = False):
+                ring: bool = False, start=None):
     """One-token decode.  kv_cache: (k (B,Sc,Hkv,dh), v); returns
-    (y1, new_cache).  `pos` is the absolute position (B,1) or scalar."""
+    (y1, new_cache).  `pos` is the absolute position (B,1) or scalar;
+    `start` is the optional (B,) per-lane stale-KV mask (see
+    `decode_attention`)."""
     positions = jnp.reshape(pos, (1, 1)) if jnp.ndim(pos) == 0 else pos
     q, k, v = _qkv(params, x1, cfg, positions)
     kc, vc = kv_cache
     slot = (cache_len % kc.shape[1]) if ring else cache_len
     kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, axis=1)
     vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, axis=1)
-    o = A.decode_attention(q, kc, vc, cache_len + 1, window=cfg.window, ring=ring)
+    o = A.decode_attention(q, kc, vc, cache_len + 1, window=cfg.window,
+                           ring=ring, start=start)
     y = o.reshape(x1.shape[0], 1, -1) @ params["wo"]
     return y, (kc, vc)
 
@@ -162,11 +165,12 @@ def block_apply(params, x, cfg: BlockCfg, positions):
     return x + ffn_apply(params["ffn"], h, cfg)
 
 
-def block_decode(params, x1, cfg: BlockCfg, pos, state, *, ring: bool = False):
+def block_decode(params, x1, cfg: BlockCfg, pos, state, *, ring: bool = False,
+                 start=None):
     """state: {'kv': (k, v), 'len': int scalar, 'ssm': optional}."""
     h = L.rmsnorm_apply(params["ln1"], x1)
     mix, kv = attn_decode(params["attn"], h, cfg, pos, state["kv"],
-                          state["len"], ring=ring)
+                          state["len"], ring=ring, start=start)
     new_state = dict(state, kv=kv, len=state["len"] + 1)
     if cfg.ssm_state:
         sm, sst = S.ssm_decode_step(params["ssm"], h, state["ssm"])
@@ -232,9 +236,11 @@ def dec_block_apply(params, x, enc_out, cfg: BlockCfg, positions):
     return x + (g * (h @ params["ffn"]["w_up"])) @ params["ffn"]["w_down"]
 
 
-def dec_block_decode(params, x1, enc_out, cfg: BlockCfg, pos, state):
+def dec_block_decode(params, x1, enc_out, cfg: BlockCfg, pos, state,
+                     start=None):
     h = L.layernorm_apply(params["ln1"], x1)
-    mix, kv = attn_decode(params["self_attn"], h, cfg, pos, state["kv"], state["len"])
+    mix, kv = attn_decode(params["self_attn"], h, cfg, pos, state["kv"],
+                          state["len"], start=start)
     x1 = x1 + mix
     h = L.layernorm_apply(params["ln_x"], x1)
     x1 = x1 + _cross_attn(params["cross_attn"], h, enc_out, cfg)

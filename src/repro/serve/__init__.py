@@ -1,0 +1,13 @@
+"""Micro-batching DSE serving subsystem.
+
+Single DSE requests -> per-model queues -> pow2-bucketed micro-batches ->
+one `explore_tasks` dispatch each -> per-request `DSEResult`s, with an LRU
+result cache and a multi-model registry with params hot-swap.  See
+`repro.serve.server.DSEServer` for the full semantics.
+"""
+from repro.serve.batcher import MicroBatch, MicroBatcher  # noqa: F401
+from repro.serve.cache import ResultCache  # noqa: F401
+from repro.serve.request import (DSERequest, DSEResponse,  # noqa: F401
+                                 SOURCE_CACHE, SOURCE_COALESCED,
+                                 SOURCE_DISPATCH, SOURCE_FAILED)
+from repro.serve.server import DSEServer, ServeConfig  # noqa: F401

@@ -1,0 +1,106 @@
+"""Micro-batch coalescing: many independent in-flight requests -> few
+pow2-bucketed `DSETask` dispatches.
+
+The batched exploration path (`GANDSE.explore_batch` and the baselines'
+device routes) compiles one program per (batch size, C_pad) pair, so the
+batcher reuses the `C_pad` bucketing idea on the batch axis: a micro-batch
+of m requests is padded to the next power of two by repeating its last row
+(padding rows are computed and discarded — every task lane is vmapped
+-independent, so they cannot perturb real rows), keeping the jit cache at
+<= log2(max_batch) batch-size entries no matter how ragged the arrival
+pattern is.
+
+Per-request seeds ride along as a (T,) array (`task_keys` array form), so
+a request's Selection never depends on which micro-batch it landed in or
+at which position.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.explorer import pow2_bucket
+from repro.dataset.generator import DSETask
+from repro.serve.request import DSERequest
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """One dispatchable unit: the real requests plus the padded task batch.
+
+    ``tasks``/``seeds`` carry ``padded_size`` rows; only the first
+    ``len(requests)`` are real, the rest repeat the last real row and are
+    dropped after dispatch.
+    """
+
+    model_name: str
+    requests: List[DSERequest]
+    tasks: DSETask
+    seeds: np.ndarray            # (padded_size,) int64 per-row noise seeds
+
+    @property
+    def n_real(self) -> int:
+        return len(self.requests)
+
+    @property
+    def padded_size(self) -> int:
+        return len(self.tasks)
+
+
+class MicroBatcher:
+    """Per-model FIFO admission queues + micro-batch formation."""
+
+    def __init__(self, max_batch: int = 64, pad_pow2: bool = True):
+        assert max_batch >= 1
+        self.max_batch = int(max_batch)
+        self.pad_pow2 = bool(pad_pow2)
+        self._queues: "OrderedDict[str, Deque[DSERequest]]" = OrderedDict()
+
+    def admit(self, req: DSERequest) -> None:
+        self._queues.setdefault(req.model_name, deque()).append(req)
+
+    def requeue_front(self, reqs: List[DSERequest]) -> None:
+        """Push popped requests back to the head of their queue in their
+        original order (dispatch-failure recovery: nothing is lost, the
+        next step retries them)."""
+        for req in reversed(reqs):
+            self._queues.setdefault(req.model_name, deque()).appendleft(req)
+
+    def pending(self, model_name: Optional[str] = None) -> int:
+        if model_name is not None:
+            return len(self._queues.get(model_name, ()))
+        return sum(len(q) for q in self._queues.values())
+
+    def models_with_work(self) -> List[str]:
+        return [m for m, q in self._queues.items() if q]
+
+    def next_batch(self, model_name: Optional[str] = None) -> Optional[MicroBatch]:
+        """Pop up to ``max_batch`` queued requests (FIFO; round-robin over
+        models when ``model_name`` is None) and coalesce them into one
+        padded micro-batch.  Returns None when nothing is queued."""
+        if model_name is None:
+            work = self.models_with_work()
+            if not work:
+                return None
+            model_name = work[0]
+        q = self._queues.get(model_name)
+        if not q:
+            return None
+        reqs = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
+        # rotate this model to the back so multi-model queues share dispatches
+        self._queues.move_to_end(model_name)
+
+        m = len(reqs)
+        tasks = DSETask.concat([r.as_task() for r in reqs])
+        seeds = np.array([r.seed for r in reqs], np.int64)
+        target = pow2_bucket(m, floor=1) if self.pad_pow2 else m
+        if target > m:
+            rows = np.concatenate([np.arange(m),
+                                   np.full(target - m, m - 1)])
+            tasks = tasks.take(rows)
+            seeds = seeds[rows]
+        return MicroBatch(model_name=model_name, requests=reqs,
+                          tasks=tasks, seeds=seeds)

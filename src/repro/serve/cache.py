@@ -1,0 +1,65 @@
+"""LRU result cache for served DSE queries.
+
+Keyed on ``(model, net_idx, lat_obj, pow_obj, seed)`` — exactly the inputs
+that determine a Selection under the batched-vs-sequential parity contract
+(per-task noise keys depend only on the request's own seed, never on batch
+placement), so a hit is indistinguishable from a recompute.  A hot-swap of
+an engine's params (`DSEServer.swap`) invalidates that model's entries:
+the key does not carry a params version, the swap does.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+from repro.core.dse_api import DSEResult
+
+
+class ResultCache:
+    """Bounded LRU: get/put are O(1); capacity <= 0 disables caching."""
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = int(capacity)
+        self._d: "OrderedDict[Tuple, DSEResult]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, key: Tuple) -> Optional[DSEResult]:
+        if self.capacity <= 0:
+            return None
+        hit = self._d.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return hit
+
+    def put(self, key: Tuple, result: DSEResult) -> None:
+        if self.capacity <= 0:
+            return
+        self._d[key] = result
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate_model(self, model_name: str) -> int:
+        """Drop every entry of one model (key[0] is the model name); returns
+        how many were dropped.  Called on params hot-swap."""
+        stale = [k for k in self._d if k[0] == model_name]
+        for k in stale:
+            del self._d[k]
+        return len(stale)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def stats(self) -> dict:
+        return {"size": len(self._d), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}

@@ -1,0 +1,68 @@
+"""Request/response records for the DSE serving subsystem.
+
+One `DSERequest` is one user query from the paper's exploration phase: a
+parsed network (net-space indices), the two objectives `metric <= x`, and
+the noise seed that makes the query reproducible.  The server answers with
+a `DSEResponse` wrapping the engine's `DSEResult` plus serving metadata
+(which micro-batch carried it, whether it was a cache hit or coalesced
+onto an identical in-flight request).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.dse_api import DSEResult, cache_key
+from repro.dataset.generator import DSETask
+
+#: how a response was produced
+SOURCE_DISPATCH = "dispatch"     # computed by this micro-batch
+SOURCE_CACHE = "cache"           # LRU hit from an earlier dispatch
+SOURCE_COALESCED = "coalesced"   # rode an identical in-flight request
+SOURCE_FAILED = "failed"         # dispatch kept failing; gave up (see error)
+
+
+@dataclasses.dataclass(frozen=True)
+class DSERequest:
+    """One admitted DSE query."""
+
+    rid: int                     # server-assigned, unique per server
+    model_name: str              # which registered engine serves it
+    net_idx: np.ndarray          # (n_net_dims,) parsed network indices
+    lat_obj: float               # latency objective, seconds
+    pow_obj: float               # power objective, watts
+    seed: int = 0                # per-request noise seed
+
+    @property
+    def key(self) -> Tuple:
+        """Result-cache identity (see `repro.core.dse_api.cache_key`)."""
+        return cache_key(self.model_name, self.net_idx, self.lat_obj,
+                         self.pow_obj, self.seed)
+
+    def as_task(self) -> DSETask:
+        """This request as a 1-row task batch."""
+        return DSETask.single(self.net_idx, self.lat_obj, self.pow_obj)
+
+
+@dataclasses.dataclass
+class DSEResponse:
+    """The server's answer to one request.  ``result`` is None only for
+    SOURCE_FAILED responses (the engine kept raising past the retry cap);
+    ``error`` then carries the last exception's message."""
+
+    rid: int
+    model_name: str
+    result: Optional[DSEResult]
+    source: str = SOURCE_DISPATCH
+    batch_size: int = 1          # real (unpadded) rows in the carrying batch
+    error: Optional[str] = None
+
+    @property
+    def cached(self) -> bool:
+        return self.source == SOURCE_CACHE
+
+    @property
+    def ok(self) -> bool:
+        return self.result is not None

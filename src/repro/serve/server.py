@@ -1,0 +1,232 @@
+"""`DSEServer`: the micro-batching serving front-end for DSE engines.
+
+The paper reports per-query DSE latency (Table 5); a production deployment
+sees many independent in-flight queries.  This server closes the gap
+between single submissions and the device-resident batched exploration
+path that PR 2/3 built for *pre-formed* batches:
+
+- ``submit`` admits one request (or parses a raw network description) into
+  a per-model FIFO queue, answering straight from the LRU result cache
+  when an identical query was already served, or coalescing onto an
+  identical in-flight request so equal work is dispatched once;
+- ``step`` pops one pow2-bucketed micro-batch and dispatches it through
+  the engine's ``explore_tasks`` (the `DSEMethod` protocol) with per
+  -request seeds, so every response is Selection-identical to a standalone
+  ``explore`` call — batching is invisible to correctness;
+- ``drain`` steps until every queue is empty and hands back the pending
+  responses;
+- ``register`` hosts one engine per design model, and ``swap`` hot-swaps a
+  model's generator params via ``GANDSE.attach`` — params refresh without
+  recompilation (the compiled G forward is cached on (space, gan_cfg)),
+  with that model's cache entries invalidated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dse_api import DSEMethod, DSEResult, parse_network
+from repro.serve.batcher import MicroBatch, MicroBatcher
+from repro.serve.cache import ResultCache
+from repro.serve.request import (SOURCE_CACHE, SOURCE_COALESCED,
+                                 SOURCE_DISPATCH, SOURCE_FAILED,
+                                 DSERequest, DSEResponse)
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 64          # micro-batch cap (before pow2 padding)
+    cache_capacity: int = 4096   # LRU entries; <= 0 disables result caching
+    pad_pow2: bool = True        # bucket batch sizes so the jit cache stays bounded
+    coalesce_identical: bool = True  # identical queued requests dispatch once
+    response_retention: int = 4096   # newest responses kept (rid lookup AND
+                                     # undrained outbox); size >= expected
+                                     # per-drain volume
+    max_dispatch_attempts: int = 2   # per-request cap before a FAILED response
+
+
+class DSEServer:
+    """Multi-model micro-batching DSE server (single-threaded event loop:
+    submissions and dispatches interleave on the caller's thread)."""
+
+    def __init__(self, cfg: Optional[ServeConfig] = None):
+        self.cfg = cfg or ServeConfig()
+        self.engines: Dict[str, DSEMethod] = {}
+        self.cache = ResultCache(self.cfg.cache_capacity)
+        self.batcher = MicroBatcher(self.cfg.max_batch, self.cfg.pad_pow2)
+        self._next_rid = 0
+        # key -> rids of identical requests riding the queued one
+        self._followers: Dict[Tuple, List[int]] = {}
+        # bounded rid -> response map (oldest evicted past retention), so a
+        # long-lived server under sustained traffic holds steady memory
+        self._responses: "OrderedDict[int, DSEResponse]" = OrderedDict()
+        self._outbox: List[DSEResponse] = []
+        self._attempts: Dict[int, int] = {}   # rid -> failed dispatch count
+        self.stats = {
+            "submitted": 0, "dispatched_rows": 0, "padded_rows": 0,
+            "batches": 0, "coalesced": 0, "swaps": 0, "failed": 0,
+            "dispatch_s": 0.0,
+        }
+
+    # ---- registry ----------------------------------------------------------
+    def register(self, engine: DSEMethod) -> DSEMethod:
+        """Host ``engine`` for its design model (one engine per model name);
+        re-registering a name replaces the engine and drops its cache."""
+        name = engine.model.name
+        if name in self.engines:
+            self.cache.invalidate_model(name)
+        self.engines[name] = engine
+        return engine
+
+    def swap(self, model_name: str, ds, g_params) -> int:
+        """Hot-swap a model's dataset/params via the engine's ``attach``
+        (no retrain, no recompile) and invalidate its cached results;
+        returns the number of invalidated entries.  Queued requests are
+        served by the new params — like any refresh, in-flight work lands
+        on whichever params are attached at dispatch time."""
+        self.engines[model_name].attach(ds, g_params)
+        self.stats["swaps"] += 1
+        return self.cache.invalidate_model(model_name)
+
+    # ---- admission ---------------------------------------------------------
+    def submit(self, model_name: str, net_idx, lat_obj: float,
+               pow_obj: float, seed: int = 0) -> int:
+        """Admit one DSE query; returns its request id.  The response
+        appears on the next ``drain``/``step`` that covers it (immediately
+        for a cache hit)."""
+        assert model_name in self.engines, f"no engine for '{model_name}'"
+        # copy: asarray aliases an int64 caller buffer, and the request's
+        # cache/coalescing key is recomputed from net_idx at dispatch — a
+        # caller-side mutation must not desync it (or poison the cache)
+        net_idx = np.array(net_idx, np.int64, copy=True).reshape(-1)
+        # reject at the door: a malformed request must never reach (and
+        # poison) a batch — and a negative index would wrap silently in
+        # numpy, exploring (and caching!) the wrong network
+        net_space = self.engines[model_name].model.net_space
+        if net_idx.shape[0] != net_space.n_dims:
+            raise ValueError(f"net_idx has {net_idx.shape[0]} dims, "
+                             f"'{model_name}' expects {net_space.n_dims}")
+        sizes = np.asarray(net_space.group_sizes)
+        if np.any((net_idx < 0) | (net_idx >= sizes)):
+            raise ValueError(f"net_idx {net_idx.tolist()} out of range for "
+                             f"'{model_name}' (sizes {sizes.tolist()})")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.stats["submitted"] += 1
+        req = DSERequest(rid=rid, model_name=model_name, net_idx=net_idx,
+                         lat_obj=float(lat_obj), pow_obj=float(pow_obj),
+                         seed=int(seed))
+        key = req.key
+        hit = self.cache.get(key)
+        if hit is not None:
+            self._respond(DSEResponse(rid, model_name, hit, SOURCE_CACHE))
+            return rid
+        if self.cfg.coalesce_identical and key in self._followers:
+            self._followers[key].append(rid)
+            self.stats["coalesced"] += 1
+            return rid
+        self._followers[key] = []
+        self.batcher.admit(req)
+        return rid
+
+    def submit_network(self, model_name: str, desc: Dict[str, float],
+                       lat_obj: float, pow_obj: float, seed: int = 0) -> int:
+        """Parsing-phase front door: a raw network description is snapped
+        onto the model's net space (`parse_network`) before admission."""
+        net_idx = parse_network(desc, self.engines[model_name].model)
+        return self.submit(model_name, net_idx, lat_obj, pow_obj, seed=seed)
+
+    # ---- dispatch ----------------------------------------------------------
+    def step(self, model_name: Optional[str] = None) -> int:
+        """Dispatch one micro-batch (round-robin over models with work when
+        ``model_name`` is None); returns the number of requests answered
+        (0 when idle)."""
+        batch = self.batcher.next_batch(model_name)
+        if batch is None:
+            return 0
+        return self._dispatch(batch)
+
+    def drain(self) -> List[DSEResponse]:
+        """Step until every queue is empty, then hand back (and clear) all
+        responses produced since the last drain, in production order."""
+        while self.step() > 0:
+            pass
+        out, self._outbox = self._outbox, []
+        return out
+
+    def response(self, rid: int) -> Optional[DSEResponse]:
+        return self._responses.get(rid)
+
+    def _dispatch(self, batch: MicroBatch) -> int:
+        engine = self.engines[batch.model_name]
+        t0 = time.time()
+        try:
+            results = engine.explore_tasks(batch.tasks, seed=batch.seeds)
+        except Exception as e:
+            # dispatch failed: requeue the popped requests at the head of
+            # their queue (followers stay attached) so nothing is lost —
+            # except requests that keep failing, which get a FAILED
+            # response instead of wedging the queue forever (a poison
+            # request would otherwise starve its whole model)
+            retry = []
+            for req in batch.requests:
+                n = self._attempts.get(req.rid, 0) + 1
+                if n < self.cfg.max_dispatch_attempts:
+                    self._attempts[req.rid] = n
+                    retry.append(req)
+                else:
+                    self._attempts.pop(req.rid, None)
+                    self._fail(req, batch.model_name, e)
+            self.batcher.requeue_front(retry)
+            raise
+        self.stats["dispatch_s"] += time.time() - t0
+        self.stats["batches"] += 1
+        self.stats["dispatched_rows"] += batch.n_real
+        self.stats["padded_rows"] += batch.padded_size - batch.n_real
+        answered = 0
+        for i, req in enumerate(batch.requests):   # padding rows discarded
+            res: DSEResult = results[i]
+            key = req.key
+            self._attempts.pop(req.rid, None)
+            self.cache.put(key, res)
+            self._respond(DSEResponse(req.rid, batch.model_name, res,
+                                      SOURCE_DISPATCH, batch.n_real))
+            answered += 1
+            for rid in self._followers.pop(key, ()):
+                self._respond(DSEResponse(rid, batch.model_name, res,
+                                          SOURCE_COALESCED, batch.n_real))
+                answered += 1
+        return answered
+
+    def _fail(self, req: DSERequest, model_name: str, exc: Exception) -> None:
+        self.stats["failed"] += 1
+        self._respond(DSEResponse(req.rid, model_name, None,
+                                  SOURCE_FAILED, error=str(exc)))
+        for rid in self._followers.pop(req.key, ()):
+            self.stats["failed"] += 1
+            self._respond(DSEResponse(rid, model_name, None,
+                                      SOURCE_FAILED, error=str(exc)))
+
+    def _respond(self, resp: DSEResponse) -> None:
+        self._responses[resp.rid] = resp
+        while len(self._responses) > max(self.cfg.response_retention, 1):
+            self._responses.popitem(last=False)
+        self._outbox.append(resp)
+        # same bound for the drain outbox: a step()/response(rid) polling
+        # loop that never drains must not accumulate responses forever
+        if len(self._outbox) > max(self.cfg.response_retention, 1):
+            del self._outbox[0]
+
+    # ---- introspection -----------------------------------------------------
+    def summary(self) -> Dict:
+        s = dict(self.stats)
+        s["pending"] = self.batcher.pending()
+        s["cache"] = self.cache.stats()
+        s["models"] = sorted(self.engines)
+        s["mean_batch_size"] = (s["dispatched_rows"] / s["batches"]
+                                if s["batches"] else 0.0)
+        return s

@@ -112,10 +112,10 @@ def make_prefill_step(m: MB.ModelCfg, *, mesh: Optional[Mesh] = None) -> Callabl
 
 
 def make_decode_step(m: MB.ModelCfg, *, mesh: Optional[Mesh] = None) -> Callable:
-    def decode_step(params, token, pos, states, enc_out=None):
+    def decode_step(params, token, pos, states, enc_out=None, start=None):
         with SH.use_mesh(mesh):
             logits, states = MB.decode_step(params, m, token, pos, states,
-                                            enc_out=enc_out)
+                                            enc_out=enc_out, start=start)
         return logits, states
 
     return decode_step

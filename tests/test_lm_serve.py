@@ -1,0 +1,85 @@
+"""Slot-reuse regression for the continuous-batching LM engine.
+
+`launch/serve.py` used to carry a no-op "reset" (`st.at[...].set(st) if
+False else st`) when admitting a request into a freed batch slot, so the
+new stream attended to the previous occupant's stale KV entries (they sit
+*below* the shared `len` watermark, which the causal mask does not hide).
+The fix masks each lane's cache below its admission clock
+(`decode_step(start=...)`) and re-initializes per-lane recurrent state, so
+a reused slot must decode exactly what a fresh engine would.
+
+gemma3-1b-reduced covers both ring (windowed) and global attention KV;
+xlstm-reduced covers the recurrent (mlstm/slstm) lane reset.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch.serve import Engine, Request
+from repro.models import base as MB
+
+
+@pytest.fixture(scope="module")
+def engines():
+    out = {}
+    for arch in ("gemma3-1b", "xlstm-1.3b"):
+        m = configs.get_reduced(arch)
+        params = MB.init_params(jax.random.PRNGKey(0), m)
+        out[arch] = (m, params)
+    return out
+
+
+def _serve(m, params, prompts, slots, cache_len=64, max_new=6):
+    eng = Engine(m, params, slots, cache_len)
+    for r, p in enumerate(prompts):
+        eng.submit(Request(rid=r, prompt=list(p), max_new=max_new))
+    eng.run(max_iters=512)
+    assert len(eng.finished) == len(prompts)
+    return {r.rid: r.out for r in eng.finished}
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "xlstm-1.3b"])
+def test_reused_slot_matches_fresh_engine(arch, engines):
+    """Back-to-back requests through ONE slot: the second request decodes
+    on top of the first one's leftover state and must still match a fresh
+    -engine run of the same prompt."""
+    m, params = engines[arch]
+    rng = np.random.default_rng(0)
+    p1 = rng.integers(0, m.vocab, size=12).tolist()
+    p2 = rng.integers(0, m.vocab, size=9).tolist()
+    reused = _serve(m, params, [p1, p2], slots=1)
+    fresh = _serve(m, params, [p2], slots=1)
+    assert reused[1] == fresh[0], "reused slot leaked the previous request"
+    # sanity: the first request matches its own fresh run too
+    assert reused[0] == _serve(m, params, [p1], slots=1)[0]
+
+
+def test_kv_capacity_exhaustion_raises(engines):
+    """Global-attention KV caches are append-only across the engine's
+    lifetime: once the clock reaches cache_len, decode would silently
+    clamp writes onto the last slot — the engine must fail loudly
+    instead (regression for the silent-garbage failure mode)."""
+    m, params = engines["gemma3-1b"]
+    rng = np.random.default_rng(2)
+    # cache_len must cover the 32-wide attention window (ring span), but 36
+    # total engine steps are fewer than the two requests need (12 + 32)
+    eng = Engine(m, params, 1, cache_len=36)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, m.vocab, 8).tolist(),
+                       max_new=4))
+    eng.submit(Request(rid=1, prompt=rng.integers(0, m.vocab, 8).tolist(),
+                       max_new=24))
+    with pytest.raises(RuntimeError, match="KV capacity"):
+        eng.run(max_iters=64)
+
+
+def test_reused_slot_matches_fresh_engine_interleaved(engines):
+    """Slot reuse while ANOTHER stream is mid-flight: request 3 is admitted
+    into whichever of the two slots frees first (its stream start lands
+    mid-clock, exercising the per-lane mask against live neighbours)."""
+    m, params = engines["gemma3-1b"]
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, m.vocab, size=n).tolist() for n in (10, 14, 8)]
+    served = _serve(m, params, prompts, slots=2)
+    for rid, p in enumerate(prompts):
+        assert served[rid] == _serve(m, params, [p], slots=1)[0], rid

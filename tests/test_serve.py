@@ -1,0 +1,388 @@
+"""DSE serving parity — the `DSEServer` contract.
+
+N interleaved single submissions must be Selection-identical to ONE direct
+`explore_tasks` call on the same tasks (micro-batching, pow2 padding, and
+queue order are invisible to correctness), including zero-feasible tasks;
+a warm (cache-hit) pass returns the same results without dispatching;
+identical in-flight requests coalesce into one dispatched row; and a
+params hot-swap through `DSEServer.swap` serves the new params without
+recompiling the generator forward.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import gan as G
+from repro.core.dse_api import GANDSE
+from repro.core.explorer import ExplorerConfig, _cached_fwd
+from repro.dataset.generator import generate_tasks
+from repro.design_models.dnnweaver import DnnWeaverModel
+from repro.design_models.im2col import Im2colModel
+from repro.serve import DSEServer, ServeConfig
+
+MODELS = {m.name: m for m in (DnnWeaverModel, Im2colModel)}
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {name: cls() for name, cls in MODELS.items()}
+
+
+def _attached(model, tiny_gan_cfg, small_dataset, seed=3, ds_model=None):
+    """Random-init generator: serving parity does not depend on training
+    quality (same rationale as test_explore_batch)."""
+    cfg = tiny_gan_cfg(model)
+    g = GANDSE(model, cfg,
+               ExplorerConfig(prob_threshold=0.1, max_candidates=128))
+    ds = small_dataset(ds_model or model, n=256)
+    g.attach(ds, G.init_generator(jax.random.PRNGKey(seed), cfg, model.space))
+    return g
+
+
+def _assert_selection_equal(tag, i, sa, sb):
+    assert sa.n_candidates == sb.n_candidates, (tag, i)
+    assert (sa.cfg_idx is None) == (sb.cfg_idx is None), (tag, i)
+    if sa.cfg_idx is not None:
+        np.testing.assert_array_equal(sa.cfg_idx, sb.cfg_idx,
+                                      err_msg=f"{tag}[{i}]")
+    assert sa.latency == sb.latency and sa.power == sb.power, (tag, i)
+    assert sa.satisfied == sb.satisfied, (tag, i)
+
+
+def _submit_all(srv, model, tasks, seed0, order):
+    """Single submissions in an arbitrary interleaving; rid -> task row."""
+    rid_to_row = {}
+    for i in order:
+        rid = srv.submit(model.name, tasks.net_idx[i], tasks.lat_obj[i],
+                         tasks.pow_obj[i], seed=seed0 + i)
+        rid_to_row[rid] = i
+    return rid_to_row
+
+
+def test_server_parity_with_direct_batch(models, tiny_gan_cfg, small_dataset):
+    """Shuffled single submissions through small micro-batches (4+2, the
+    tail pow2-padded) == one direct explore_tasks call, row by row."""
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+    srv = DSEServer(ServeConfig(max_batch=4))
+    srv.register(g)
+    tasks = generate_tasks(model, 6, seed=2)
+    direct = g.explore_tasks(tasks, seed=7)
+
+    order = [3, 0, 5, 1, 4, 2]              # arrival != task order
+    rid_to_row = _submit_all(srv, model, tasks, 7, order)
+    responses = srv.drain()
+    assert len(responses) == 6
+    assert srv.stats["batches"] == 2        # 4 + 2 (pow2 buckets)
+    assert srv.stats["padded_rows"] == 0    # 4 and 2 are already pow2
+    for r in responses:
+        i = rid_to_row[r.rid]
+        _assert_selection_equal("parity", i, r.result.selection,
+                                direct[i].selection)
+
+    # ragged arrival: 3 requests coalesce into one micro-batch padded to
+    # its pow2 bucket (4); the padding row is discarded, rows unchanged
+    srv2 = DSEServer(ServeConfig(max_batch=4, cache_capacity=0))
+    srv2.register(g)
+    rid_to_row = _submit_all(srv2, model, tasks, 7, [2, 0, 1])
+    for r in srv2.drain():
+        i = rid_to_row[r.rid]
+        _assert_selection_equal("padded", i, r.result.selection,
+                                direct[i].selection)
+    assert srv2.stats["padded_rows"] == 1   # 3 real rows -> pow2 bucket 4
+
+
+def test_server_parity_zero_feasible(models, tiny_gan_cfg, small_dataset):
+    """Tasks whose every candidate is infeasible serve cleanly (no config,
+    not satisfied) and still match the direct batch."""
+    from test_explore_batch import _InfeasibleModel
+
+    model = _InfeasibleModel()
+    g = _attached(model, tiny_gan_cfg, small_dataset,
+                  ds_model=models["dnnweaver"])
+    srv = DSEServer(ServeConfig(max_batch=4))
+    srv.register(g)
+    tasks = generate_tasks(models["dnnweaver"], 6, seed=2)
+    direct = g.explore_tasks(tasks, seed=7)
+    rid_to_row = _submit_all(srv, model, tasks, 7, list(range(6)))
+    for r in srv.drain():
+        i = rid_to_row[r.rid]
+        _assert_selection_equal("zero_feasible", i, r.result.selection,
+                                direct[i].selection)
+        assert r.result.selection.cfg_idx is None
+        assert not r.result.satisfied
+
+
+def test_server_warm_pass_hits_cache(models, tiny_gan_cfg, small_dataset):
+    """Cold pass dispatches; an identical warm pass answers entirely from
+    the LRU cache with the same Selections."""
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+    srv = DSEServer(ServeConfig(max_batch=8))
+    srv.register(g)
+    tasks = generate_tasks(model, 6, seed=2)
+
+    rid_to_row = _submit_all(srv, model, tasks, 7, range(6))
+    cold = {rid_to_row[r.rid]: r for r in srv.drain()}
+    assert all(r.source == "dispatch" for r in cold.values())
+    batches_after_cold = srv.stats["batches"]
+
+    rid_to_row = _submit_all(srv, model, tasks, 7, range(6))
+    warm = {rid_to_row[r.rid]: r for r in srv.drain()}
+    assert srv.stats["batches"] == batches_after_cold   # nothing dispatched
+    for i in range(6):
+        assert warm[i].cached and warm[i].source == "cache"
+        _assert_selection_equal("warm", i, warm[i].result.selection,
+                                cold[i].result.selection)
+    # a different seed is a different key: must miss and dispatch
+    rid = srv.submit(model.name, tasks.net_idx[0], tasks.lat_obj[0],
+                     tasks.pow_obj[0], seed=99)
+    (resp,) = srv.drain()
+    assert resp.rid == rid and resp.source == "dispatch"
+
+
+def test_server_coalesces_identical_inflight(models, tiny_gan_cfg,
+                                             small_dataset):
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+    srv = DSEServer(ServeConfig(max_batch=8))
+    srv.register(g)
+    tasks = generate_tasks(model, 2, seed=2)
+    args = (model.name, tasks.net_idx[0], tasks.lat_obj[0], tasks.pow_obj[0])
+    r1 = srv.submit(*args, seed=7)
+    r2 = srv.submit(*args, seed=7)          # identical, still queued
+    r3 = srv.submit(model.name, tasks.net_idx[1], tasks.lat_obj[1],
+                    tasks.pow_obj[1], seed=8)
+    responses = {r.rid: r for r in srv.drain()}
+    assert srv.stats["dispatched_rows"] == 2            # not 3
+    assert srv.stats["coalesced"] == 1
+    assert responses[r2].source == "coalesced"
+    _assert_selection_equal("coalesce", 0, responses[r1].result.selection,
+                            responses[r2].result.selection)
+    assert responses[r3].source == "dispatch"
+
+
+def test_multi_model_registry_round_robin(models, tiny_gan_cfg,
+                                          small_dataset):
+    """One server hosts one engine per design model; interleaved
+    submissions for both models each match their own direct batch."""
+    g1 = _attached(models["dnnweaver"], tiny_gan_cfg, small_dataset)
+    g2 = _attached(models["im2col"], tiny_gan_cfg, small_dataset)
+    srv = DSEServer(ServeConfig(max_batch=4))
+    srv.register(g1)
+    srv.register(g2)
+    t1 = generate_tasks(models["dnnweaver"], 4, seed=2)
+    t2 = generate_tasks(models["im2col"], 4, seed=2)
+    direct1 = g1.explore_tasks(t1, seed=7)
+    direct2 = g2.explore_tasks(t2, seed=7)
+
+    rids = {}
+    for i in range(4):                      # strict interleave
+        rids[srv.submit("dnnweaver", t1.net_idx[i], t1.lat_obj[i],
+                        t1.pow_obj[i], seed=7 + i)] = ("dnnweaver", i)
+        rids[srv.submit("im2col", t2.net_idx[i], t2.lat_obj[i],
+                        t2.pow_obj[i], seed=7 + i)] = ("im2col", i)
+    responses = srv.drain()
+    assert len(responses) == 8
+    for r in responses:
+        name, i = rids[r.rid]
+        want = (direct1 if name == "dnnweaver" else direct2)[i]
+        assert r.model_name == name
+        _assert_selection_equal(name, i, r.result.selection,
+                                want.selection)
+
+
+def test_dispatch_failure_loses_no_requests(models, tiny_gan_cfg,
+                                            small_dataset):
+    """Error path: an engine exception mid-dispatch re-queues the popped
+    requests (followers stay attached); the failure surfaces to the caller
+    and a retry answers everything."""
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+
+    class Flaky:
+        """Engine wrapper that fails its first dispatch."""
+        def __init__(self, inner):
+            self._inner, self.model, self.calls = inner, inner.model, 0
+
+        def explore_tasks(self, tasks, seed=0):
+            self.calls += 1
+            if self.calls == 1:
+                raise RuntimeError("transient engine failure")
+            return self._inner.explore_tasks(tasks, seed=seed)
+
+    srv = DSEServer(ServeConfig(max_batch=8))
+    srv.register(Flaky(g))
+    tasks = generate_tasks(model, 2, seed=2)
+    rids = _submit_all(srv, model, tasks, 7, range(2))
+    dup = srv.submit(model.name, tasks.net_idx[0], tasks.lat_obj[0],
+                     tasks.pow_obj[0], seed=7)            # coalesced follower
+    with pytest.raises(RuntimeError, match="transient"):
+        srv.drain()
+    assert srv.batcher.pending() == 2                     # nothing lost
+    responses = {r.rid: r for r in srv.drain()}           # retry succeeds
+    assert set(responses) == set(rids) | {dup}
+    direct = g.explore_tasks(tasks, seed=7)
+    for rid, i in rids.items():
+        _assert_selection_equal("retry", i, responses[rid].result.selection,
+                                direct[i].selection)
+    assert responses[dup].source == "coalesced"
+
+
+def test_poison_request_cannot_wedge_the_queue(models, tiny_gan_cfg,
+                                               small_dataset):
+    """A deterministically-failing dispatch must not starve the model's
+    queue: past the retry cap the carrying batch's requests get FAILED
+    responses (with the error) and later submissions are served."""
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+
+    class PoisonOnSeed:
+        """Engine wrapper that always fails on batches carrying seed 666."""
+        def __init__(self, inner):
+            self._inner, self.model = inner, inner.model
+
+        def explore_tasks(self, tasks, seed=0):
+            if np.any(np.asarray(seed) == 666):
+                raise RuntimeError("poison request")
+            return self._inner.explore_tasks(tasks, seed=seed)
+
+    srv = DSEServer(ServeConfig(max_batch=8))
+    srv.register(PoisonOnSeed(g))
+    tasks = generate_tasks(model, 3, seed=2)
+    bad = srv.submit(model.name, tasks.net_idx[0], tasks.lat_obj[0],
+                     tasks.pow_obj[0], seed=666)
+    other = srv.submit(model.name, tasks.net_idx[1], tasks.lat_obj[1],
+                       tasks.pow_obj[1], seed=7)
+    for _ in range(2):                       # attempts 1 and 2 both raise
+        with pytest.raises(RuntimeError, match="poison"):
+            srv.drain()
+    assert srv.batcher.pending() == 0        # not requeued past the cap
+    responses = {r.rid: r for r in srv.drain()}
+    assert responses[bad].source == "failed" and not responses[bad].ok
+    assert "poison" in responses[bad].error
+    assert responses[other].source == "failed"   # collateral of its batch
+    # the queue is unwedged: a fresh request is served normally
+    rid = srv.submit(model.name, tasks.net_idx[2], tasks.lat_obj[2],
+                     tasks.pow_obj[2], seed=8)
+    (resp,) = srv.drain()
+    assert resp.rid == rid and resp.ok and resp.source == "dispatch"
+    assert srv.stats["failed"] == 2
+
+
+def test_submit_rejects_malformed_net_idx(models, tiny_gan_cfg,
+                                          small_dataset):
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+    srv = DSEServer(ServeConfig())
+    srv.register(g)
+    with pytest.raises(ValueError, match="dims"):
+        srv.submit(model.name, np.zeros(99, np.int64), 1e-3, 2.0)
+    n_dims = model.net_space.n_dims
+    with pytest.raises(ValueError, match="out of range"):
+        srv.submit(model.name, np.full(n_dims, 10**6), 1e-3, 2.0)
+    with pytest.raises(ValueError, match="out of range"):
+        # a negative index would wrap silently and cache the wrong network
+        srv.submit(model.name, np.full(n_dims, -1), 1e-3, 2.0)
+    assert srv.batcher.pending() == 0        # nothing admitted
+
+
+def test_submit_copies_net_idx(models, tiny_gan_cfg, small_dataset):
+    """The admitted request must not alias the caller's buffer: mutating
+    it after submit() must not change what is explored or cached."""
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+    srv = DSEServer(ServeConfig(max_batch=4))
+    srv.register(g)
+    tasks = generate_tasks(model, 2, seed=2)
+    buf = np.array(tasks.net_idx[0], np.int64)   # int64: asarray would alias
+    rid = srv.submit(model.name, buf, tasks.lat_obj[0], tasks.pow_obj[0],
+                     seed=7)
+    buf[:] = 0                                   # caller reuses the buffer
+    (resp,) = srv.drain()
+    direct = g.explore(tasks.net_idx[0], tasks.lat_obj[0], tasks.pow_obj[0],
+                       seed=7)
+    _assert_selection_equal("copy", 0, resp.result.selection,
+                            direct.selection)
+    # and the cache key matches the ORIGINAL values, not the mutated buffer
+    warm = srv.submit(model.name, tasks.net_idx[0], tasks.lat_obj[0],
+                      tasks.pow_obj[0], seed=7)
+    (hit,) = srv.drain()
+    assert hit.rid == warm and hit.cached
+
+
+def test_response_retention_is_bounded(models, tiny_gan_cfg, small_dataset):
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+    srv = DSEServer(ServeConfig(max_batch=4, cache_capacity=0,
+                                response_retention=2))
+    srv.register(g)
+    tasks = generate_tasks(model, 4, seed=2)
+    rid_to_row = _submit_all(srv, model, tasks, 7, range(4))
+    responses = srv.drain()
+    # both the rid lookup map AND the drain outbox hold only the newest
+    # `response_retention` entries (a polling loop that never drains must
+    # not accumulate responses forever); size retention for the expected
+    # per-drain volume in drain-based loops
+    assert [r.rid for r in responses] == sorted(rid_to_row)[-2:]
+    assert len(srv._responses) == 2                       # oldest evicted
+    assert all(srv.response(r) is not None
+               for r in sorted(rid_to_row)[-2:])
+    assert srv.stats["dispatched_rows"] == 4              # work still done
+
+
+def test_hot_swap_refreshes_params_without_recompile(models, tiny_gan_cfg,
+                                                     small_dataset):
+    """`DSEServer.swap` serves the new params (cache invalidated, results
+    match a fresh engine built on those params) and never recompiles: the
+    compiled G forward is cached on (space, gan_cfg) and the swapped
+    Explorer reuses the same function with no new trace."""
+    model = models["dnnweaver"]
+    cfg = tiny_gan_cfg(model)
+    ds = small_dataset(model, n=256)
+    params_a = G.init_generator(jax.random.PRNGKey(3), cfg, model.space)
+    params_b = G.init_generator(jax.random.PRNGKey(4), cfg, model.space)
+
+    g = GANDSE(model, cfg,
+               ExplorerConfig(prob_threshold=0.1, max_candidates=128))
+    g.attach(ds, params_a)
+    srv = DSEServer(ServeConfig(max_batch=4))
+    srv.register(g)
+    tasks = generate_tasks(model, 4, seed=2)
+    rid_to_row = _submit_all(srv, model, tasks, 7, range(4))
+    cold = {rid_to_row[r.rid]: r for r in srv.drain()}
+
+    fwd_before = g._explorer._fwd
+    info_before = _cached_fwd.cache_info()
+    cache_size = getattr(fwd_before, "_cache_size", None)
+    traces_before = cache_size() if cache_size else None
+
+    invalidated = srv.swap(model.name, ds, params_b)
+    assert invalidated == 4                  # stale results dropped
+
+    rid_to_row = _submit_all(srv, model, tasks, 7, range(4))
+    swapped = {rid_to_row[r.rid]: r for r in srv.drain()}
+    assert all(r.source == "dispatch" for r in swapped.values())
+
+    # no recompilation: same compiled forward object, no new lru entry,
+    # and (when the jit cache is introspectable) no new traced program
+    assert g._explorer._fwd is fwd_before
+    info_after = _cached_fwd.cache_info()
+    assert info_after.misses == info_before.misses
+    if traces_before is not None:
+        assert cache_size() == traces_before
+
+    # the swap actually took: results come from params_b
+    g_b = GANDSE(model, cfg,
+                 ExplorerConfig(prob_threshold=0.1, max_candidates=128))
+    g_b.attach(ds, params_b)
+    direct_b = g_b.explore_tasks(tasks, seed=7)
+    changed = 0
+    for i in range(4):
+        _assert_selection_equal("swap", i, swapped[i].result.selection,
+                                direct_b[i].selection)
+        sa, sb = cold[i].result.selection, swapped[i].result.selection
+        changed += int(sa.cfg_idx is None or sb.cfg_idx is None
+                       or not np.array_equal(sa.cfg_idx, sb.cfg_idx)
+                       or sa.n_candidates != sb.n_candidates)
+    assert changed > 0, "different params produced identical selections"
