@@ -1,0 +1,214 @@
+"""Fused-MLP fast-path benchmark: Algorithm 1 train step + vmapped-G
+inference, fused (Pallas) vs unfused (jnp).
+
+GANDSE's compute budget is the deep ReLU G/D MLPs; the fused path runs
+them through the Pallas dense+bias+ReLU kernels (custom_vjp backward for
+training, the layer-chained megakernel for inference) behind the
+``kernels/dispatch.py`` backend rule.
+
+  PYTHONPATH=src python benchmarks/bench_fused_train.py [--quick]
+
+On TPU the bench times both routes and gates the fused train step at
+>= 1.5x the unfused one (``--min-speedup``).  Off TPU the compiled Pallas
+path does not exist (the dispatch rule sends both configs to jnp), so the
+speedup gate auto-skips and the bench instead *gates parity*: forward and
+``jax.grad`` through ``fused_dense`` and the megakernel in interpret mode
+must match the jnp reference to <= 1e-4 — CPU CI validates the exact
+kernel code TPU compiles.  Every run appends to the repo-root
+``BENCH_kernels.json`` trajectory (latest copy in
+``results/fused_train.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gan as G
+from repro.core import train as T
+from repro.core.dse_api import GANDSE
+from repro.core.explorer import ExplorerConfig
+from repro.dataset.generator import generate_dataset, generate_tasks
+from repro.design_models.im2col import Im2colModel
+from repro.kernels import fused_mlp as FM
+from repro.kernels import ref
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+TRAJECTORY = os.environ.get("REPRO_BENCH_TRAJECTORY", "BENCH_kernels.json")
+PARITY_TOL = 1e-4
+
+
+def _time(fn, iters: int) -> float:
+    jax.block_until_ready(fn())          # warmup / compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _build(quick: bool):
+    model = Im2colModel()
+    layers, neurons, bs = (2, 128, 128) if quick else (3, 512, 512)
+    cfg = G.GANConfig(n_net=model.net_space.n_dims).scaled(
+        layers=layers, neurons=neurons, batch_size=bs)
+    ds = generate_dataset(model, max(bs * 2, 512), seed=0)
+    return model, cfg, ds
+
+
+def _bench_train_step(model, cfg, ds, iters: int) -> float:
+    """Min wall time of one jitted Algorithm 1 step at cfg.batch_size."""
+    rng = jax.random.PRNGKey(0)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    gp = G.init_generator(r1, cfg, model.space)
+    dp = G.init_discriminator(r2, cfg, model.space)
+    g_optim, d_optim, step = T.make_train_step(model, cfg)
+    go, do = g_optim.init(gp), d_optim.init(dp)
+    batch = {k: jnp.asarray(v) for k, v in
+             T.encode_batch(model, ds, np.arange(cfg.batch_size)).items()}
+    return _time(lambda: step(gp, dp, go, do, batch, r3), iters)
+
+
+def _bench_inference(model, cfg, ds, n_tasks: int, iters: int) -> float:
+    """Min wall time of the vmapped noise-averaged G forward (the
+    explorer/serve dispatch hot spot) over a task batch."""
+    engine = GANDSE(model, cfg, ExplorerConfig(noise_samples=4))
+    engine.attach(ds, G.init_generator(jax.random.PRNGKey(3), cfg,
+                                       model.space))
+    tasks = generate_tasks(model, n_tasks, seed=1)
+    ex = engine._explorer
+    return _time(lambda: ex.generator_probs_device(
+        tasks.net_idx, tasks.lat_obj, tasks.pow_obj, seed=0), iters)
+
+
+def _parity() -> Dict[str, float]:
+    """Interpret-mode fused-vs-jnp parity, forward AND grad (the off-TPU
+    gate): max abs error across fused_dense (both relu modes) and the
+    layer-chained megakernel."""
+    rng = np.random.default_rng(0)
+    m, k, n = 96, 160, 80
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    ct = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    out = {}
+    for relu in (True, False):
+        ref_fn = ref.fused_dense_relu if relu else ref.fused_dense
+        fwd_err = jnp.max(jnp.abs(
+            FM.fused_dense(x, w, b, relu=relu, interpret=True)
+            - ref_fn(x, w, b)))
+        g_f = jax.grad(lambda *a: jnp.sum(FM.fused_dense(
+            *a, relu=relu, interpret=True) * ct), argnums=(0, 1, 2))(x, w, b)
+        g_r = jax.grad(lambda *a: jnp.sum(ref_fn(*a) * ct),
+                       argnums=(0, 1, 2))(x, w, b)
+        grad_err = max(float(jnp.max(jnp.abs(a - bb)))
+                       for a, bb in zip(g_f, g_r))
+        tag = "relu" if relu else "linear"
+        out[f"fused_dense_{tag}_fwd_err"] = float(fwd_err)
+        out[f"fused_dense_{tag}_grad_err"] = grad_err
+
+    dims = [(37, 64), (64, 64), (64, 29)]
+    xm = jnp.asarray(rng.normal(size=(33, 37)), jnp.float32)
+    ws = tuple(jnp.asarray(rng.normal(size=d) * 0.1, jnp.float32)
+               for d in dims)
+    bs = tuple(jnp.asarray(rng.normal(size=(d[1],)), jnp.float32)
+               for d in dims)
+    ctm = jnp.asarray(rng.normal(size=(33, 29)), jnp.float32)
+    out["megakernel_fwd_err"] = float(jnp.max(jnp.abs(
+        FM.fused_mlp(xm, ws, bs, interpret=True) - ref.fused_mlp(xm, ws, bs))))
+    g_f = jax.grad(lambda *a: jnp.sum(FM.fused_mlp(
+        *a, interpret=True) * ctm), argnums=(0, 1, 2))(xm, ws, bs)
+    g_r = jax.grad(lambda *a: jnp.sum(ref.fused_mlp(*a) * ctm),
+                   argnums=(0, 1, 2))(xm, ws, bs)
+    errs = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), g_f, g_r))
+    out["megakernel_grad_err"] = max(errs)
+    return out
+
+
+def run(quick: bool = False) -> Dict:
+    model, cfg, ds = _build(quick)
+    fused_cfg = dataclasses.replace(cfg, use_fused=True)
+    unfused_cfg = dataclasses.replace(cfg, use_fused=False)
+    on_tpu = jax.default_backend() == "tpu"
+    iters = 3 if quick else 5
+    n_tasks = 32 if quick else 64
+
+    out = {
+        "backend": jax.default_backend(),
+        "on_tpu": on_tpu,
+        "layers": cfg.g_hidden_layers,
+        "neurons": cfg.g_neurons,
+        "batch_size": cfg.batch_size,
+        "quick": quick,
+    }
+    out["train_step_unfused_s"] = _bench_train_step(model, unfused_cfg, ds,
+                                                    iters)
+    out["train_step_fused_s"] = _bench_train_step(model, fused_cfg, ds, iters)
+    out["infer_unfused_s"] = _bench_inference(model, unfused_cfg, ds,
+                                              n_tasks, iters)
+    out["infer_fused_s"] = _bench_inference(model, fused_cfg, ds, n_tasks,
+                                            iters)
+    out["train_speedup"] = out["train_step_unfused_s"] / out["train_step_fused_s"]
+    out["infer_speedup"] = out["infer_unfused_s"] / out["infer_fused_s"]
+    out["parity"] = _parity()
+    out["parity_max_err"] = max(out["parity"].values())
+
+    print(f"[fused_train] backend={out['backend']} "
+          f"step unfused={out['train_step_unfused_s']*1e3:.1f}ms "
+          f"fused={out['train_step_fused_s']*1e3:.1f}ms "
+          f"({out['train_speedup']:.2f}x)  "
+          f"infer {out['infer_unfused_s']*1e3:.1f} -> "
+          f"{out['infer_fused_s']*1e3:.1f}ms ({out['infer_speedup']:.2f}x)  "
+          f"parity_max_err={out['parity_max_err']:.2e}", flush=True)
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "fused_train.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    traj = []
+    if os.path.exists(TRAJECTORY):
+        with open(TRAJECTORY) as f:
+            traj = json.load(f)
+    traj.append({"bench": "fused_train", **out})
+    with open(TRAJECTORY, "w") as f:
+        json.dump(traj, f, indent=1)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale: smaller nets, fewer trials")
+    ap.add_argument("--min-speedup", type=float, default=1.5,
+                    help="fused-vs-unfused train-step bar (TPU only; the "
+                         "dispatch rule makes both routes identical jnp "
+                         "off-TPU, so the gate auto-skips there)")
+    args = ap.parse_args(argv)
+    out = run(quick=args.quick)
+    if out["parity_max_err"] > PARITY_TOL:
+        print(f"FAIL: fused-vs-jnp parity {out['parity_max_err']:.2e} "
+              f"(> {PARITY_TOL:g} tolerance)")
+        return 1
+    if not out["on_tpu"]:
+        print(f"ok: parity <= {PARITY_TOL:g}; speedup gate skipped "
+              f"(backend={out['backend']}, fused path is TPU-only)")
+        return 0
+    if out["train_speedup"] < args.min_speedup:
+        print(f"FAIL: fused train step only {out['train_speedup']:.2f}x "
+              f"(< {args.min_speedup:g}x bar)")
+        return 1
+    print(f"ok: fused train step {out['train_speedup']:.2f}x, inference "
+          f"{out['infer_speedup']:.2f}x (>= {args.min_speedup:g}x bar)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,8 +9,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import write_json
+from benchmarks.common import append_trajectory, write_json
+from repro.kernels import dispatch
+from repro.kernels import fused_mlp as FM
 from repro.kernels import ops, ref
+
+TRAJECTORY = "BENCH_kernels.json"
 
 
 def _time(fn, *args, iters=5):
@@ -35,6 +39,21 @@ def run() -> dict:
         - ref.fused_dense_relu(x, w, b))))
     out["fused_dense_relu"] = {"us_per_call": t * 1e6, "max_abs_err": err}
 
+    # whole-MLP layer-chained megakernel (3 x 512 hidden): time the actual
+    # dispatch path (TPU -> megakernel, CPU -> jnp chain), like the rows
+    # above time the ops.* dispatchers
+    dims = [(512, 512)] * 3 + [(512, 256)]
+    ws = tuple(jnp.asarray(rng.normal(size=d) * 0.05, jnp.float32)
+               for d in dims)
+    bs = tuple(jnp.zeros((d[1],), jnp.float32) for d in dims)
+    layers = [{"w": w, "b": b} for w, b in zip(ws, bs)]
+    xm = jnp.asarray(rng.normal(size=(1024, 512)), jnp.float32)
+    chain = jax.jit(lambda a: dispatch.mlp_chain(layers, a))
+    t = _time(chain, xm)
+    err = float(jnp.max(jnp.abs(
+        FM.fused_mlp(xm, ws, bs, interpret=True) - ref.fused_mlp(xm, ws, bs))))
+    out["fused_mlp_chain"] = {"us_per_call": t * 1e6, "max_abs_err": err}
+
     q = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.float32)
@@ -48,6 +67,7 @@ def run() -> dict:
         print(f"[kernels] {name:18s} {row['us_per_call']:10.1f} us/call "
               f"max_err={row['max_abs_err']:.2e}", flush=True)
     write_json("kernels.json", out)
+    append_trajectory(TRAJECTORY, {"bench": "kernels", **out})
     return out
 
 

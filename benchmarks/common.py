@@ -136,3 +136,15 @@ def write_json(name: str, payload) -> str:
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return path
+
+
+def append_trajectory(path: str, entry: dict) -> None:
+    """Append one run to a repo-root BENCH_*.json perf trajectory (the
+    cross-PR history the benches keep next to their latest results/)."""
+    traj = []
+    if os.path.exists(path):
+        with open(path) as f:
+            traj = json.load(f)
+    traj.append(entry)
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1)

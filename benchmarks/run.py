@@ -9,8 +9,8 @@ import argparse
 import sys
 import time
 
-BENCHES = ("kernels", "table5", "difficulty", "distribution", "losses",
-           "mesh_dse", "roofline")
+BENCHES = ("kernels", "fused_train", "table5", "difficulty", "distribution",
+           "losses", "mesh_dse", "roofline")
 
 
 def main(argv=None) -> int:

@@ -26,7 +26,8 @@ import numpy as np
 
 from repro.core import gan as G
 from repro.core.explorer import (ExplorerConfig, enumerate_candidates,
-                                 enumerate_candidates_batch, task_keys)
+                                 enumerate_candidates_batch,
+                                 flatten_task_draws, task_keys)
 from repro.core.selector import select, select_batch
 from repro.core.dse_api import DSEResult, row_seeds
 from repro.core.train import encode_batch
@@ -37,27 +38,49 @@ from repro.optim import adam, apply_updates
 
 
 @functools.lru_cache(maxsize=None)
-def _cached_fwd(space, noise_dim: int):
-    """Jitted MLP inference, cached on (space, noise_dim) like the
-    explorer's G forward: retrains / new LargeMLP instances never recompile.
+def _cached_fwd(space, noise_dim: int, use_fused: Optional[bool] = None,
+                chained: bool = None):
+    """Jitted MLP inference, cached on (space, noise_dim, use_fused) like
+    the explorer's G forward: retrains / new LargeMLP instances never
+    recompile.
 
-    ``fwd``: plain batch forward (training loss path).
+    ``fwd``: plain batch forward (training loss path; per-layer fused
+    dense on the fused route so the loss stays differentiable).
     ``fwd_mean``: per-task noise-averaged forward for exploration — task t
     averages n_samples draws from fold_in(keys[t], s), the same streams
     whether tasks run one at a time or batched (the batched-vs-sequential
-    parity contract, identical to the Explorer's).
+    parity contract, identical to the Explorer's).  On the fused route
+    (``chained`` None = dispatch auto) the draws flatten into one row
+    batch through the layer-chained megakernel, mirroring the Explorer.
     """
+    from repro.kernels import dispatch as D
+    if chained is None:
+        chained = D.fused_enabled(use_fused) and D.on_tpu()
 
-    def _probs(params, net_enc, obj_enc, noise):
-        x = jnp.concatenate([net_enc, obj_enc, noise], axis=-1)
-        logits = L.mlp_apply(params, x)
+    def _probs_logits(logits):
         probs = [jax.nn.softmax(g, -1) for g in space.split_groups(logits)]
         return jnp.concatenate(probs, axis=-1)
 
+    def _probs(params, net_enc, obj_enc, noise):
+        x = jnp.concatenate([net_enc, obj_enc, noise], axis=-1)
+        return _probs_logits(L.mlp_apply(params, x, use_fused=use_fused))
+
     fwd = jax.jit(_probs)
+
+    def noise_fn(key, s):
+        return G.sample_noise_dim(jax.random.fold_in(key, s), 1, noise_dim)[0]
 
     @functools.partial(jax.jit, static_argnames="n_samples")
     def fwd_mean(params, net_enc, obj_enc, keys, n_samples):
+        if chained:
+            t = net_enc.shape[0]
+            net_r, obj_r, noise_r = flatten_task_draws(
+                net_enc, obj_enc, keys, n_samples, noise_fn)
+            x = jnp.concatenate([net_r, obj_r, noise_r], axis=-1)
+            probs = _probs_logits(
+                L.mlp_apply_chained(params, x, use_fused=use_fused))
+            return jnp.mean(probs.reshape(t, n_samples, -1), axis=1)
+
         def one_task(net, obj, key):
             def one(s):
                 noise = G.sample_noise_dim(jax.random.fold_in(key, s), 1,
@@ -79,6 +102,8 @@ class LargeMLP:
     batch_size: int = 1024
     noise_dim: int = 8
     explorer_cfg: ExplorerConfig = dataclasses.field(default_factory=ExplorerConfig)
+    #: Pallas fused-MLP path (kernels/dispatch.py rule): None = backend auto
+    use_fused: Optional[bool] = None
 
     method_name = "LargeMLP"
 
@@ -86,7 +111,16 @@ class LargeMLP:
         self.ds: Optional[Dataset] = None
         self.params = None
         self._fwd, self._fwd_mean = _cached_fwd(self.model.space,
-                                                self.noise_dim)
+                                                self.noise_dim,
+                                                self.use_fused)
+
+    def set_use_fused(self, use_fused: Optional[bool]) -> "LargeMLP":
+        """Flip the fused-MLP dispatch (serving-layer override hook);
+        refreshes the cached jitted forwards for the new route."""
+        self.use_fused = use_fused
+        self._fwd, self._fwd_mean = _cached_fwd(self.model.space,
+                                                self.noise_dim, use_fused)
+        return self
 
     def n_params(self) -> int:
         return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(self.params))

@@ -128,6 +128,16 @@ class GANDSE:
         self.attach(self.ds, self.state.g_params)
         return self.state
 
+    def set_use_fused(self, use_fused: Optional[bool]) -> "GANDSE":
+        """Flip the Pallas fused-MLP dispatch (None = backend auto) — the
+        serving-layer override hook.  Rebuilds the explorer when one is
+        attached: the compiled forward is cached on (space, gan_cfg), so
+        flipping back to a previously used setting never recompiles."""
+        self.gan_cfg = dataclasses.replace(self.gan_cfg, use_fused=use_fused)
+        if self._explorer is not None:
+            self.attach(self.ds, self._explorer.g_params)
+        return self
+
     def attach(self, ds: Dataset, g_params: Dict) -> Explorer:
         """Serving entry: wire a dataset (for its normalizers) and trained
         generator params into the explorer without retraining — e.g. params

@@ -254,8 +254,27 @@ def enumerate_candidates_batch(
     return cand, valid, counts_host
 
 
+def flatten_task_draws(net_enc, obj_enc, keys, n_samples: int, noise_fn):
+    """THE (task, sample) -> row-batch layout of the chained (megakernel)
+    inference route, shared by the explorer and the LargeMLP baseline so
+    the per-task noise-stream parity contract lives in one place.
+
+    noise_fn(key, s) -> (noise_dim,) draws sample s of a task's stream
+    (the same fold_in(key, s) streams the vmap route uses).  Returns
+    (net_rows, obj_rows, noise_rows), each (T * n_samples, ·), task-major
+    — averaging back is ``rows.reshape(T, n_samples, -1).mean(axis=1)``.
+    """
+    t = net_enc.shape[0]
+    noise = jax.vmap(lambda key: jax.vmap(
+        lambda s: noise_fn(key, s))(jnp.arange(n_samples)))(keys)
+    rep = lambda a: jnp.repeat(a[:, None], n_samples, axis=1) \
+        .reshape(t * n_samples, -1)
+    return rep(net_enc), rep(obj_enc), noise.reshape(t * n_samples, -1)
+
+
 @functools.lru_cache(maxsize=None)
-def _cached_fwd(space: ConfigSpace, gan_cfg: G.GANConfig):
+def _cached_fwd(space: ConfigSpace, gan_cfg: G.GANConfig,
+                chained: bool = None):
     """Module-level jitted G inference, cached on (space, gan_cfg): a fresh
     Explorer (e.g. per retrain / hot-swap) reuses the compiled forward
     instead of recompiling from scratch.
@@ -263,14 +282,37 @@ def _cached_fwd(space: ConfigSpace, gan_cfg: G.GANConfig):
     Per-task noise streams: task t averages n_samples draws from
     fold_in(keys[t], s) — the same streams whether tasks run one at a time
     or batched, which is the batched-vs-sequential parity contract.
+
+    ``chained`` (None = dispatch auto, i.e. TPU) flattens the (T, samples)
+    draws into one row batch and runs G through the layer-chained Pallas
+    megakernel — one big dispatch instead of a vmap of width-1 forwards.
+    Same noise streams either way; off the fused path the vmap structure
+    (and its numerics) is unchanged.
     """
+    from repro.kernels import dispatch as D
+    if chained is None:
+        chained = D.fused_enabled(gan_cfg.use_fused) and D.on_tpu()
+
+    def noise_fn(key, s):
+        return G.sample_noise(jax.random.fold_in(key, s), 1, gan_cfg)[0]
+
     @functools.partial(jax.jit, static_argnames="n_samples")
     def fwd(g_params, net_enc, obj_enc, keys, n_samples):
+        if chained:
+            t = net_enc.shape[0]
+            net_r, obj_r, noise_r = flatten_task_draws(
+                net_enc, obj_enc, keys, n_samples, noise_fn)
+            probs = G.generator_apply(
+                g_params, space, net_r, obj_r, noise_r,
+                use_fused=gan_cfg.use_fused, chained=True)
+            return jnp.mean(probs.reshape(t, n_samples, -1), axis=1)
+
         def one_task(net, obj, key):
             def one(s):
                 noise = G.sample_noise(jax.random.fold_in(key, s), 1, gan_cfg)
                 return G.generator_apply(g_params, space, net[None], obj[None],
-                                         noise)[0]
+                                         noise,
+                                         use_fused=gan_cfg.use_fused)[0]
             return jnp.mean(jax.vmap(one)(jnp.arange(n_samples)), axis=0)
 
         return jax.vmap(one_task)(net_enc, obj_enc, keys)

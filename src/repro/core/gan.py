@@ -11,7 +11,7 @@ Both are multilayer perceptrons with ReLU activations and Adam optimizers
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +41,11 @@ class GANConfig:
     w_critic: float = 0.5
     batch_size: int = 1024
     dtype: str = "float32"
+    #: Pallas fused-MLP fast path: None = backend auto (TPU on, CPU/GPU
+    #: off), True/False force it (kernels/dispatch.py is the one rule).
+    #: Threads through training (per-layer fused_dense with its
+    #: custom_vjp) and inference (layer-chained megakernel).
+    use_fused: Optional[bool] = None
 
     def scaled(self, layers: int, neurons: int, lr: float | None = None,
                batch_size: int | None = None) -> "GANConfig":
@@ -67,10 +72,22 @@ def init_discriminator(rng, cfg: GANConfig, space: ConfigSpace):
 
 
 def generator_apply(params, space: ConfigSpace, net_enc, obj_enc, noise,
-                    use_fused: bool = False):
-    """Returns (B, onehot_width) per-group softmax probabilities."""
+                    use_fused: Optional[bool] = None, chained: bool = False,
+                    interpret: bool = False):
+    """Returns (B, onehot_width) per-group softmax probabilities.
+
+    ``use_fused`` follows the dispatch rule (None = backend auto);
+    ``chained=True`` takes the layer-chained megakernel on the fused
+    route — the inference fast path (training wants the per-layer
+    backward, so the train step leaves it False).
+    """
     x = jnp.concatenate([net_enc, obj_enc, noise], axis=-1)
-    logits = L.mlp_apply(params, x, use_fused=use_fused)
+    if chained:
+        logits = L.mlp_apply_chained(params, x, use_fused=use_fused,
+                                     interpret=interpret)
+    else:
+        logits = L.mlp_apply(params, x, use_fused=use_fused,
+                             interpret=interpret)
     gidx, mask, flat2pad = _padded_layout(space)
     padded = jnp.where(mask, logits[..., gidx], -jnp.inf)
     probs = jax.nn.softmax(padded, axis=-1)      # pad -inf -> exactly 0
@@ -78,10 +95,11 @@ def generator_apply(params, space: ConfigSpace, net_enc, obj_enc, noise,
 
 
 def discriminator_apply(params, net_enc, cfg_onehot, obj_enc,
-                        use_fused: bool = False):
+                        use_fused: Optional[bool] = None,
+                        interpret: bool = False):
     """Returns (B, 2) satisfaction logits ([False, True] classes)."""
     x = jnp.concatenate([net_enc, cfg_onehot, obj_enc], axis=-1)
-    return L.mlp_apply(params, x, use_fused=use_fused)
+    return L.mlp_apply(params, x, use_fused=use_fused, interpret=interpret)
 
 
 def sample_noise_dim(rng, batch: int, noise_dim: int):

@@ -32,6 +32,10 @@ Two oracle routes exist:
 epoch as a single jitted scan with the (params, opt-state, rng) carry
 donated — the Python interpreter touches the hot path once per epoch, not
 once per batch.
+
+On TPU the G/D MLP layers inside the step run through the Pallas fused
+dense+bias+ReLU kernels — forward and backward (their custom_vjp) — per
+the ``kernels/dispatch.py`` rule; ``GANConfig.use_fused`` overrides it.
 """
 from __future__ import annotations
 
@@ -135,7 +139,9 @@ def _make_step_body(model: DesignModel, cfg: G.GANConfig,
     oracle, _ = make_oracle(model, use_jax_oracle)
 
     def losses_g(g_params, d_params, batch, noise):
-        probs = G.generator_apply(g_params, space, batch["net_enc"], batch["obj_enc"], noise)
+        probs = G.generator_apply(g_params, space, batch["net_enc"],
+                                  batch["obj_enc"], noise,
+                                  use_fused=cfg.use_fused)
         # --- external design model on the hard-decoded config (lines 7-8)
         cfg_idx = G.decode_hard(space, probs)
         lat_g, pow_g = oracle(cfg_idx, batch["net_idx"])
@@ -144,7 +150,9 @@ def _make_step_body(model: DesignModel, cfg: G.GANConfig,
 
         # D is frozen here (grads are taken w.r.t. g_params only); gradients
         # flow *through* D into G's probs — that is the critic signal.
-        sat_logits = G.discriminator_apply(d_params, batch["net_enc"], probs, batch["obj_enc"])
+        sat_logits = G.discriminator_apply(d_params, batch["net_enc"], probs,
+                                           batch["obj_enc"],
+                                           use_fused=cfg.use_fused)
         loss_critic = jnp.mean(G.satisfaction_ce(sat_logits, jnp.ones_like(sat_actual)))
         ce_cfg = G.grouped_cross_entropy(space, batch["cfg_onehot"], probs)
         loss_config = jnp.mean((1.0 - sat_actual) * ce_cfg)       # masked (line 11/14)
@@ -156,7 +164,9 @@ def _make_step_body(model: DesignModel, cfg: G.GANConfig,
 
     def losses_d(d_params, batch, probs, sat_actual):
         probs = jax.lax.stop_gradient(probs)
-        sat_logits = G.discriminator_apply(d_params, batch["net_enc"], probs, batch["obj_enc"])
+        sat_logits = G.discriminator_apply(d_params, batch["net_enc"], probs,
+                                           batch["obj_enc"],
+                                           use_fused=cfg.use_fused)
         loss_dis = jnp.mean(G.satisfaction_ce(sat_logits, sat_actual))  # lines 12/15
         d_acc = jnp.mean(
             (jnp.argmax(sat_logits, -1).astype(jnp.float32) == sat_actual).astype(jnp.float32)

@@ -6,42 +6,29 @@ Pallas kernel body to execute in Python for validation.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels import fused_mlp as _fm
+from repro.kernels import dispatch as _dispatch
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 
 
 def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return _dispatch.on_tpu()
 
 
 def fused_dense_relu(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
                      *, interpret: Optional[bool] = None) -> jnp.ndarray:
-    """relu(x @ w + b); x may have leading batch dims (flattened to M)."""
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    if interpret or (interpret is None and _on_tpu()):
-        y = _fm.fused_dense(x2, w, b, relu=True, interpret=bool(interpret))
-    else:
-        y = _ref.fused_dense_relu(x2, w, b)
-    return y.reshape(*lead, w.shape[-1])
+    """relu(x @ w + b); x may have leading batch dims (flattened to M).
+    Thin alias over ``dispatch.dense`` (the single dispatch point)."""
+    return _dispatch.dense(x, w, b, relu=True, interpret=bool(interpret))
 
 
 def fused_dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
                 *, interpret: Optional[bool] = None) -> jnp.ndarray:
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    if interpret or (interpret is None and _on_tpu()):
-        y = _fm.fused_dense(x2, w, b, relu=False, interpret=bool(interpret))
-    else:
-        y = _ref.fused_dense(x2, w, b)
-    return y.reshape(*lead, w.shape[-1])
+    return _dispatch.dense(x, w, b, relu=False, interpret=bool(interpret))
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -25,6 +25,17 @@ def fused_dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return y.astype(x.dtype)
 
 
+def fused_mlp(x: jnp.ndarray, ws, bs) -> jnp.ndarray:
+    """Whole-MLP chain (hidden ReLU, linear head) in f32 accumulation —
+    the oracle for the layer-chained megakernel."""
+    y = x.astype(jnp.float32)
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        y = jnp.dot(y, w.astype(jnp.float32)) + b.astype(jnp.float32)
+        if i < len(ws) - 1:
+            y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
 def flash_attention(
     q: jnp.ndarray,            # (B, H, Sq, D)
     k: jnp.ndarray,            # (B, Hkv, Sk, D)

@@ -50,7 +50,11 @@ def main(argv=None) -> int:
                     help="fraction of requests re-submitted verbatim "
                          "(exercises the cache/coalescing path)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fused", choices=("auto", "on", "off"), default="auto",
+                    help="Pallas fused-MLP dispatch: auto = backend rule "
+                         "(TPU on, CPU/GPU off), on/off force it")
     args = ap.parse_args(argv)
+    use_fused = {"auto": None, "on": True, "off": False}[args.fused]
 
     model = MODELS[args.model]()
     gan_cfg = G.GANConfig(n_net=model.net_space.n_dims).scaled(
@@ -66,7 +70,8 @@ def main(argv=None) -> int:
                                            gan_cfg, model.space))
 
     srv = DSEServer(ServeConfig(max_batch=args.max_batch,
-                                cache_capacity=args.cache))
+                                cache_capacity=args.cache,
+                                use_fused=use_fused))
     srv.register(engine)
 
     n = args.requests
@@ -100,7 +105,10 @@ def main(argv=None) -> int:
     n_total = n + 2 * n_rep
     s = srv.summary()
     stats = summarize([r.result for r in responses])
-    print(f"[dse_serve] model={model.name} requests={len(responses)}/{n_total} "
+    print(f"[dse_serve] model={model.name} "
+          f"kernels={s['kernels']['backend']}:"
+          f"{'fused' if s['kernels']['fused'][model.name] else 'jnp'} "
+          f"requests={len(responses)}/{n_total} "
           f"batches={s['batches']} mean_batch={s['mean_batch_size']:.1f} "
           f"coalesced={s['coalesced']} cache_hits={s['cache']['hits']} "
           f"satisfied={stats['n_satisfied']} "

@@ -38,21 +38,49 @@ def mlp_init(rng, in_dim: int, hidden: Sequence[int], out_dim: int, dtype=jnp.fl
     return {"layers": layers}
 
 
-def mlp_apply(params, x, activation=jax.nn.relu, use_fused: bool = False):
+def mlp_apply(params, x, activation=jax.nn.relu,
+              use_fused: Optional[bool] = None, interpret: bool = False):
     """Plain MLP: hidden layers with `activation`, linear final layer.
 
-    ``use_fused=True`` routes hidden layers through the Pallas fused
-    dense+bias+ReLU kernel (kernels/fused_mlp.py) when available.
+    ``use_fused`` routes every layer through the Pallas fused
+    dense+bias+ReLU kernels (kernels/fused_mlp.py, differentiable via
+    their custom_vjp): ``None`` = backend auto (TPU on, CPU/GPU off —
+    see kernels/dispatch.py), ``True``/``False`` force it.  The fused
+    kernels hard-wire ReLU, so a non-ReLU ``activation`` raises when
+    fusion was explicitly requested and silently takes the unfused path
+    on auto (it is never ignored).
     """
     layers = params["layers"]
-    if use_fused:
-        from repro.kernels import ops as kops
+    from repro.kernels import dispatch as D
+    if activation is not jax.nn.relu:
+        if use_fused:
+            raise ValueError(
+                "mlp_apply(use_fused=True) supports only jax.nn.relu — the "
+                f"fused kernel hard-wires the ReLU epilogue; got {activation!r}. "
+                "Pass use_fused=None/False to use the unfused path.")
+        # non-ReLU: always the unfused path, interpret included — there is
+        # no kernel for this activation, so it is honored, never replaced
+    elif D.kernel_route_active(use_fused, interpret):
         for p in layers[:-1]:
-            x = kops.fused_dense_relu(x, p["w"], p["b"])
-    else:
-        for p in layers[:-1]:
-            x = activation(dense_apply(p, x))
+            x = D.dense(x, p["w"], p["b"], relu=True, use_fused=use_fused,
+                        interpret=interpret)
+        return D.dense(x, layers[-1]["w"], layers[-1]["b"], relu=False,
+                       use_fused=use_fused, interpret=interpret)
+    for p in layers[:-1]:
+        x = activation(dense_apply(p, x))
     return dense_apply(layers[-1], x)
+
+
+def mlp_apply_chained(params, x, use_fused: Optional[bool] = None,
+                      interpret: bool = False):
+    """Inference-only MLP forward (hidden ReLU, linear head) through the
+    layer-chained megakernel on the fused route: activations stay in VMEM
+    across layers instead of one HBM round-trip per layer.  Differentiable
+    too (the megakernel's VJP re-runs the fused_dense chain), but training
+    should prefer ``mlp_apply`` — its per-layer backward is cheaper."""
+    from repro.kernels import dispatch as D
+    return D.mlp_chain(params["layers"], x, use_fused=use_fused,
+                       interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

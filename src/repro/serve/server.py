@@ -47,6 +47,10 @@ class ServeConfig:
                                      # undrained outbox); size >= expected
                                      # per-drain volume
     max_dispatch_attempts: int = 2   # per-request cap before a FAILED response
+    use_fused: Optional[bool] = None  # Pallas fused-MLP dispatch override
+                                      # pushed onto every registered engine
+                                      # (None = leave the engine's own
+                                      # setting / backend auto)
 
 
 class DSEServer:
@@ -75,10 +79,17 @@ class DSEServer:
     # ---- registry ----------------------------------------------------------
     def register(self, engine: DSEMethod) -> DSEMethod:
         """Host ``engine`` for its design model (one engine per model name);
-        re-registering a name replaces the engine and drops its cache."""
+        re-registering a name replaces the engine and drops its cache.
+        When ``ServeConfig.use_fused`` is set, the server pushes it onto
+        the engine (``set_use_fused``) so every hosted engine serves with
+        one consistent kernel route."""
         name = engine.model.name
         if name in self.engines:
             self.cache.invalidate_model(name)
+        if self.cfg.use_fused is not None:
+            setter = getattr(engine, "set_use_fused", None)
+            if setter is not None:
+                setter(self.cfg.use_fused)
         self.engines[name] = engine
         return engine
 
@@ -223,10 +234,30 @@ class DSEServer:
 
     # ---- introspection -----------------------------------------------------
     def summary(self) -> Dict:
+        import jax
+
+        from repro.kernels import dispatch as _dispatch
+
         s = dict(self.stats)
         s["pending"] = self.batcher.pending()
         s["cache"] = self.cache.stats()
         s["models"] = sorted(self.engines)
         s["mean_batch_size"] = (s["dispatched_rows"] / s["batches"]
                                 if s["batches"] else 0.0)
+        def engine_route(e) -> bool:
+            # the route this engine's dispatches actually take: the server
+            # -level flag when set, else the engine's own setting (backend
+            # conjunct included — "on" off-TPU still reports False)
+            flag = self.cfg.use_fused
+            if flag is None:
+                gc = getattr(e, "gan_cfg", None)
+                flag = gc.use_fused if gc is not None \
+                    else getattr(e, "use_fused", None)
+            return _dispatch.kernel_route_active(flag)
+
+        s["kernels"] = {
+            "backend": jax.default_backend(),
+            "fused": {name: engine_route(e)
+                      for name, e in sorted(self.engines.items())},
+        }
         return s

@@ -16,7 +16,8 @@ from repro.kernels import ops, ref
 @pytest.mark.parametrize("m,k,n", [
     (128, 256, 512),      # aligned
     (256, 1024, 768),     # multi-block K
-    (100, 36, 50),        # odd (falls back to whole-dim blocks)
+    (100, 36, 50),        # odd (operands padded up to the block multiple)
+    (97, 131, 53),        # prime dims (must NOT fall back to whole-dim blocks)
     (1, 8, 16),           # degenerate
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -31,6 +32,83 @@ def test_fused_dense_matches_ref(m, k, n, dtype, relu, rng):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=tol, atol=tol)
+
+
+def test_pick_is_vmem_bounded():
+    """A prime/odd dim must never produce a block bigger than requested
+    (the old _pick returned the whole dim, blowing the VMEM budget)."""
+    for dim in (997, 1021, 2049, 100, 36, 7, 1):
+        for block in (64, 128, 256, 512):
+            assert FM._pick(block, dim) <= block, (block, dim)
+    # aligned dims keep the requested block exactly
+    assert FM._pick(512, 2048) == 512
+    assert FM._pick(256, 1024) == 256
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (64, 128, 96),        # aligned
+    (97, 131, 53),        # prime (exercises the padded route end to end)
+])
+@pytest.mark.parametrize("relu", [True, False])
+def test_fused_dense_grad_matches_ref(m, k, n, relu, rng):
+    """jax.grad through the custom_vjp (Pallas backward kernels, interpret
+    mode) == grad of the jnp reference, for dx, dw, AND db."""
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    ct = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+
+    def loss(fn):
+        return lambda x, w, b: jnp.sum(fn(x, w, b) * ct)
+
+    got = jax.grad(loss(lambda x, w, b: FM.fused_dense(
+        x, w, b, relu=relu, interpret=True)), argnums=(0, 1, 2))(x, w, b)
+    ref_fn = ref.fused_dense_relu if relu else ref.fused_dense
+    want = jax.grad(loss(ref_fn), argnums=(0, 1, 2))(x, w, b)
+    for g, r, name in zip(got, want, ("dx", "dw", "db")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+def _mlp_params(rng, dims):
+    ws = tuple(jnp.asarray(rng.normal(size=d) * 0.1, jnp.float32) for d in dims)
+    bs = tuple(jnp.asarray(rng.normal(size=(d[1],)), jnp.float32) for d in dims)
+    return ws, bs
+
+
+@pytest.mark.parametrize("m,dims", [
+    (32, [(24, 64), (64, 64), (64, 48)]),    # aligned-ish widths
+    (33, [(37, 61), (61, 61), (61, 29)]),    # prime everything
+    (8, [(16, 32)]),                         # single (linear) layer
+])
+def test_fused_mlp_megakernel_matches_ref(m, dims, rng):
+    """The layer-chained megakernel == the jnp chain (hidden ReLU, linear
+    head), including awkward (padded) widths."""
+    x = jnp.asarray(rng.normal(size=(m, dims[0][0])), jnp.float32)
+    ws, bs = _mlp_params(rng, dims)
+    got = FM.fused_mlp(x, ws, bs, interpret=True)
+    want = ref.fused_mlp(x, ws, bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_mlp_megakernel_grad_matches_ref(rng):
+    """grad through the megakernel VJP (fused_dense chain recompute) ==
+    grad of the jnp chain — the final linear (relu=False) layer included."""
+    dims = [(19, 40), (40, 40), (40, 23)]
+    x = jnp.asarray(rng.normal(size=(17, 19)), jnp.float32)
+    ws, bs = _mlp_params(rng, dims)
+    ct = jnp.asarray(rng.normal(size=(17, 23)), jnp.float32)
+
+    got = jax.grad(lambda x, ws, bs: jnp.sum(
+        FM.fused_mlp(x, ws, bs, interpret=True) * ct),
+        argnums=(0, 1, 2))(x, ws, bs)
+    want = jax.grad(lambda x, ws, bs: jnp.sum(
+        ref.fused_mlp(x, ws, bs) * ct), argnums=(0, 1, 2))(x, ws, bs)
+    jax.tree.map(
+        lambda g, r: np.testing.assert_allclose(
+            np.asarray(g), np.asarray(r), rtol=1e-4, atol=1e-4),
+        got, want)
 
 
 def test_fused_dense_block_shapes(rng):
