@@ -1,0 +1,168 @@
+"""Task-throughput scaling of the sharded exploration path (1 -> N devices).
+
+The batched DSE routes vmap independent task lanes, so sharding the task
+axis over the device mesh (`repro.core.shard`) should scale throughput
+near-linearly with device count.  This bench measures `GANDSE
+.explore_batch` on the high-dimension im2col space (64 tasks x >= 1024
+candidates each, the bench_explore_throughput scale) under submeshes of
+1..N devices built by ``make_host_mesh(shape=(k, 1))``, and pins the
+parity contract: every device count returns bit-identical Selections.
+
+  PYTHONPATH=src python benchmarks/bench_shard.py [--quick] [--devices N]
+
+Device count defaults to 4 fake CPU devices (``REPRO_SHARD_DEVICES``
+overrides): the flag is injected into ``XLA_FLAGS`` before jax imports,
+so run this script as __main__ (importing it after jax is initialized
+keeps whatever device count the process already has).
+
+Acceptance bar (bench_fused_train precedent): fake CPU devices only
+parallelize when the host has cores to back them, so the >= 3x @ 4
+devices throughput gate arms only when ``os.cpu_count() >= devices`` or
+the backend is a real multi-device one (TPU/GPU); on smaller hosts the
+bench *gates parity* and reports the measured scaling honestly.  Each run
+appends to the repo-root ``BENCH_shard.json`` trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+N_DEVICES = int(os.environ.get("REPRO_SHARD_DEVICES", 4))
+if __name__ == "__main__" and "jax" not in sys.modules:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={N_DEVICES}"
+        ).strip()
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.core import gan as G
+from repro.core import shard
+from repro.core.dse_api import GANDSE
+from repro.core.explorer import ExplorerConfig
+from repro.dataset.generator import generate_dataset, generate_tasks
+from repro.design_models.im2col import Im2colModel
+from repro.launch.mesh import make_host_mesh
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+TRAJECTORY = os.environ.get("REPRO_BENCH_TRAJECTORY", "BENCH_shard.json")
+
+
+def build(quick: bool):
+    """Random-init G at serving scale (scaling does not depend on training
+    quality, only on the dispatch structure) — bench_explore_throughput's
+    build, shared scale."""
+    model = Im2colModel()
+    layers, neurons = (1, 64) if quick else (2, 256)
+    cfg = G.GANConfig(n_net=model.net_space.n_dims).scaled(
+        layers=layers, neurons=neurons, batch_size=64)
+    g = GANDSE(model, cfg, ExplorerConfig(prob_threshold=0.01,
+                                          max_candidates=2048))
+    ds = generate_dataset(model, 512, seed=0)
+    g.attach(ds, G.init_generator(jax.random.PRNGKey(3), cfg, model.space))
+    tasks = generate_tasks(model, 64, seed=2)
+    return g, tasks
+
+
+def _selections(results):
+    return [(tuple(r.selection.cfg_idx.tolist())
+             if r.selection.cfg_idx is not None else None,
+             r.selection.latency, r.selection.power, r.selection.satisfied)
+            for r in results]
+
+
+def run(quick: bool = False, devices: int = 0) -> Dict:
+    n_dev = devices or len(jax.devices())
+    n_dev = min(n_dev, len(jax.devices()))
+    g, tasks = build(quick)
+    n_tasks = int(tasks.net_idx.shape[0])
+    # 1 and n_dev always; intermediate pow2 points on the full run
+    ks = sorted({1, n_dev} | ({2} if not quick and n_dev >= 4 else set()))
+    meshes = {k: make_host_mesh(shape=(k, 1)) for k in ks}
+
+    # warmup / compile each submesh route, and pin parity against k=1
+    baseline = None
+    for k in ks:
+        with shard.task_mesh(meshes[k]):
+            sel = _selections(g.explore_batch(tasks, seed=0))
+        if baseline is None:
+            baseline = sel
+        assert sel == baseline, \
+            f"parity violated: k={k} Selections differ from k=1"
+
+    trials = 2 if quick else 3
+    best = {k: float("inf") for k in ks}
+    for _ in range(trials):                    # interleaved: noise-robust
+        for k in ks:
+            with shard.task_mesh(meshes[k]):
+                t0 = time.perf_counter()
+                g.explore_batch(tasks, seed=0)
+                best[k] = min(best[k], time.perf_counter() - t0)
+
+    cores = os.cpu_count() or 1
+    real_multidevice = jax.default_backend() in ("tpu", "gpu") \
+        and len(jax.devices()) > 1
+    out = {
+        "n_tasks": n_tasks,
+        "backend": jax.default_backend(),
+        "host_cores": cores,
+        "devices": n_dev,
+        "seconds": {str(k): best[k] for k in ks},
+        "tasks_per_s": {str(k): n_tasks / best[k] for k in ks},
+        "scaling": best[1] / best[n_dev],
+        "parity_ok": True,
+        # fake CPU devices cannot beat wall-clock without cores behind them
+        "speedup_gate_armed": real_multidevice or cores >= n_dev,
+        "quick": quick,
+    }
+    per_k = " ".join(f"k={k}:{best[k]*1e3:.0f}ms" for k in ks)
+    print(f"[shard] T={n_tasks} devices={n_dev} cores={cores} {per_k} "
+          f"scaling={out['scaling']:.2f}x parity=ok "
+          f"gate={'armed' if out['speedup_gate_armed'] else 'parity-only'}",
+          flush=True)
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "shard_scaling.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import append_trajectory
+    append_trajectory(TRAJECTORY, out)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale: smaller G, fewer trials, "
+                         "endpoints only")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="device-count ceiling (0 = all visible devices)")
+    ap.add_argument("--min-speedup", type=float, default=3.0,
+                    help="fail below this 1->N throughput ratio when the "
+                         "speedup gate is armed (host cores >= devices or "
+                         "a real multi-device backend)")
+    args = ap.parse_args(argv)
+    out = run(quick=args.quick, devices=args.devices)
+    if not out["speedup_gate_armed"]:
+        print(f"ok: parity pinned at every device count; speedup gate "
+              f"skipped ({out['host_cores']} host cores < "
+              f"{out['devices']} devices — fake devices share them)")
+        return 0
+    if out["scaling"] < args.min_speedup:
+        print(f"FAIL: {out['devices']}-device scaling only "
+              f"{out['scaling']:.2f}x (< {args.min_speedup:g}x bar)")
+        return 1
+    print(f"ok: {out['scaling']:.2f}x task throughput at {out['devices']} "
+          f"devices (>= {args.min_speedup:g}x bar), parity pinned")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

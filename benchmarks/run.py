@@ -9,6 +9,9 @@ import argparse
 import sys
 import time
 
+# bench_shard is absent on purpose: it must own the process to inject
+# --xla_force_host_platform_device_count before jax initializes — run it
+# standalone (benchmarks/bench_shard.py).
 BENCHES = ("kernels", "fused_train", "table5", "difficulty", "distribution",
            "losses", "mesh_dse", "roofline")
 

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import shard
 from repro.core.explorer import task_keys
 from repro.core.selector import Selection, is_satisfied
 from repro.core.dse_api import DSEResult, row_seeds
@@ -259,15 +260,20 @@ class PolicyGradientDRL:
     def _explore_device(self, tasks: DSETask, seed: int) -> List[DSEResult]:
         n_tasks = int(tasks.net_idx.shape[0])
         t0 = time.time()
-        net_enc = self.ds.net_encoded(self.model, tasks.net_idx)
-        obj_enc = self.ds.obj_encoded(tasks.lat_obj, tasks.pow_obj)
+        # rollout lanes shard over the active task mesh (pad, run, discard
+        # padded lanes) — the policy params stay replicated (in_axes=None)
+        seeds = row_seeds(seed, n_tasks)
+        tasks_p, seeds, n_tasks = shard.pad_tasks(tasks, seeds)
+        n_pad = int(tasks_p.net_idx.shape[0])
+        net_enc = self.ds.net_encoded(self.model, tasks_p.net_idx)
+        obj_enc = self.ds.obj_encoded(tasks_p.lat_obj, tasks_p.pow_obj)
         best = np.asarray(self._rollout_kernel()(
-            self.params,
-            jnp.asarray(tasks.net_idx, jnp.int32),
-            jnp.asarray(net_enc), jnp.asarray(obj_enc),
-            jnp.asarray(tasks.lat_obj, jnp.float32),
-            jnp.asarray(tasks.pow_obj, jnp.float32),
-            task_keys(seed, n_tasks)))
+            shard.replicate(self.params),
+            shard.put_sharded(np.asarray(tasks_p.net_idx, np.int32)),
+            shard.put_sharded(net_enc), shard.put_sharded(obj_enc),
+            shard.put_sharded(np.asarray(tasks_p.lat_obj, np.float32)),
+            shard.put_sharded(np.asarray(tasks_p.pow_obj, np.float32)),
+            shard.put_sharded(task_keys(seeds, n_pad))))[:n_tasks]
         # one float64 host-oracle call re-scores every winner
         lat64, pw64 = self.model.evaluate_indices(tasks.net_idx, best)
         per_task = (time.time() - t0) / n_tasks

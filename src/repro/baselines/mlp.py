@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gan as G
+from repro.core import shard
 from repro.core.explorer import (ExplorerConfig, enumerate_candidates,
                                  enumerate_candidates_batch,
                                  flatten_task_draws, task_keys)
@@ -185,8 +186,11 @@ class LargeMLP:
         obj_enc = self.ds.obj_encoded(np.atleast_1d(lat_obj),
                                       np.atleast_1d(pow_obj))
         keys = task_keys(seed, net_enc.shape[0])
-        return self._fwd_mean(self.params, jnp.asarray(net_enc),
-                              jnp.asarray(obj_enc), keys,
+        # task-sharded over the active mesh (no-op without one): put_sharded
+        # is a drop-in for jnp.asarray, see repro.core.shard
+        return self._fwd_mean(self.params, shard.put_sharded(net_enc),
+                              shard.put_sharded(obj_enc),
+                              shard.put_sharded(keys),
                               n_samples=self.explorer_cfg.noise_samples)
 
     def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
@@ -211,18 +215,22 @@ class LargeMLP:
         if not self.model.has_jax_oracle:
             return self._explore_seq(tasks, seed)
         t0 = time.time()
-        probs = self.generator_probs_device(tasks.net_idx, tasks.lat_obj,
-                                            tasks.pow_obj, seed)
+        # pad to the active mesh's shard multiple (GANDSE.explore_batch
+        # rule: padded lanes computed and discarded, parity bit-exact)
+        seeds = row_seeds(seed, n_tasks)
+        tasks_p, seeds, n_real = shard.pad_tasks(tasks, seeds)
+        probs = self.generator_probs_device(tasks_p.net_idx, tasks_p.lat_obj,
+                                            tasks_p.pow_obj, seeds)
         cand, valid, counts = enumerate_candidates_batch(
             self.model.space, probs, self.explorer_cfg.prob_threshold,
             self.explorer_cfg.max_candidates)
-        sels = select_batch(self.model, tasks.net_idx, cand, valid, counts,
-                            tasks.lat_obj, tasks.pow_obj)
-        per_task = (time.time() - t0) / n_tasks
+        sels = select_batch(self.model, tasks_p.net_idx, cand, valid, counts,
+                            tasks_p.lat_obj, tasks_p.pow_obj)
+        per_task = (time.time() - t0) / n_real
         return [
             DSEResult(sel, float(tasks.lat_obj[i]), float(tasks.pow_obj[i]),
                       per_task)
-            for i, sel in enumerate(sels)
+            for i, sel in enumerate(sels[:n_real])
         ]
 
     def explore_tasks(self, tasks: DSETask, seed: int = 0,

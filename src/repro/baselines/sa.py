@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import shard
 from repro.core.explorer import task_keys
 from repro.core.selector import Selection, is_satisfied
 from repro.core.dse_api import DSEResult, row_seeds
@@ -160,13 +161,19 @@ class SimulatedAnnealing:
     def _explore_device(self, tasks: DSETask, seed: int) -> List[DSEResult]:
         n_tasks = int(tasks.net_idx.shape[0])
         t0 = time.time()
+        # under an active task mesh the anneal lanes shard over the mesh's
+        # batch axes (pad to the shard multiple, discard padded lanes) —
+        # same jitted while_loop, same per-lane streams, same Selections
+        seeds = row_seeds(seed, n_tasks)
+        tasks_p, seeds, n_tasks = shard.pad_tasks(tasks, seeds)
+        n_pad = int(tasks_p.net_idx.shape[0])
         best, best_e, n_eval = self._kernel()(
-            jnp.asarray(tasks.net_idx, jnp.int32),
-            jnp.asarray(tasks.lat_obj, jnp.float32),
-            jnp.asarray(tasks.pow_obj, jnp.float32),
-            task_keys(seed, n_tasks))
-        best = np.asarray(best)
-        n_eval = np.asarray(n_eval)
+            shard.put_sharded(np.asarray(tasks_p.net_idx, np.int32)),
+            shard.put_sharded(np.asarray(tasks_p.lat_obj, np.float32)),
+            shard.put_sharded(np.asarray(tasks_p.pow_obj, np.float32)),
+            shard.put_sharded(task_keys(seeds, n_pad)))
+        best = np.asarray(best)[:n_tasks]
+        n_eval = np.asarray(n_eval)[:n_tasks]
         # one float64 host-oracle call re-scores every winner (metrics and
         # `satisfied` stay precision-consistent with the host route)
         lat64, pw64 = self.model.evaluate_indices(tasks.net_idx, best)

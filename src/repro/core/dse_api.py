@@ -18,6 +18,7 @@ from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from repro.core import gan as G
+from repro.core import shard
 from repro.core.explorer import Explorer, ExplorerConfig, row_seeds  # noqa: F401
 # (row_seeds re-exported: the per-row seed convention lives next to
 # task_keys so the device and host routes cannot drift apart)
@@ -171,6 +172,12 @@ class GANDSE:
         same caveat as `select`'s device route).  dse_seconds is the
         amortized per-task wall-clock (total / n_tasks).  Models without a
         jnp oracle fall back to the sequential host route.
+
+        Under an active task mesh (``shard.set_task_mesh``) the batch is
+        padded to a multiple of the shard count (repeat-last-row, results
+        discarded) and the whole chain — G inference, candidate
+        enumeration, Algorithm 2 — runs task-sharded across the mesh.
+        Selections are bit-identical to the single-device run.
         """
         assert self._explorer is not None, "call train() or attach() first"
         n_tasks = int(tasks.net_idx.shape[0])
@@ -179,15 +186,17 @@ class GANDSE:
         if not self.model.has_jax_oracle:
             return self._explore_seq(tasks, seed)
         t0 = time.time()
+        seeds = row_seeds(seed, n_tasks)
+        tasks_p, seeds, n_real = shard.pad_tasks(tasks, seeds)
         cand, valid, counts = self._explorer.candidates_batch(
-            tasks.net_idx, tasks.lat_obj, tasks.pow_obj, seed=seed)
-        sels = select_batch(self.model, tasks.net_idx, cand, valid, counts,
-                            tasks.lat_obj, tasks.pow_obj)
-        per_task = (time.time() - t0) / n_tasks
+            tasks_p.net_idx, tasks_p.lat_obj, tasks_p.pow_obj, seed=seeds)
+        sels = select_batch(self.model, tasks_p.net_idx, cand, valid, counts,
+                            tasks_p.lat_obj, tasks_p.pow_obj)
+        per_task = (time.time() - t0) / n_real
         return [
             DSEResult(sel, float(tasks.lat_obj[i]), float(tasks.pow_obj[i]),
                       per_task)
-            for i, sel in enumerate(sels)
+            for i, sel in enumerate(sels[:n_real])
         ]
 
     def explore_tasks(self, tasks: DSETask, seed: int = 0,

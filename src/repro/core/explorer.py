@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gan as G
+from repro.core import shard
 from repro.core.encoding import ConfigSpace, padded_group_layout
 from repro.dataset.generator import Dataset
 from repro.design_models.base import DesignModel
@@ -246,7 +247,7 @@ def enumerate_candidates_batch(
     assert space.max_group_size <= 1024 and 1 <= max_candidates <= _PROD_LIM, \
         "on-device trim needs max group size <= 1024 and cap <= 2**20"
     masks, unravel = _batched_enum_fns(space)
-    keep, counts, total = masks(jnp.asarray(probs), jnp.float32(thresh),
+    keep, counts, total = masks(shard.put_sharded(probs), jnp.float32(thresh),
                                 jnp.int32(max_candidates))
     counts_host = np.asarray(total)
     c_pad = pow2_bucket(int(counts_host.max(initial=1)))
@@ -342,13 +343,18 @@ class Explorer:
         bitwise-equal to a single-task call with that seed: batching a task
         never changes its candidates.  The sum runs in host int64 (see
         `task_keys`) so large seeds neither raise nor alias.
+
+        When a task mesh is active (``shard.set_task_mesh``) and the task
+        count divides its shard count, the inputs land task-sharded over
+        the mesh and the same jitted forward runs SPMD across devices —
+        lane numerics (and thus candidates) are unchanged.
         """
         net_enc = self.ds.net_encoded(self.model, np.atleast_2d(net_idx))
         obj_enc = self.ds.obj_encoded(np.atleast_1d(lat_obj),
                                       np.atleast_1d(pow_obj))
         keys = task_keys(seed, net_enc.shape[0])
-        return self._fwd(self.g_params, jnp.asarray(net_enc),
-                         jnp.asarray(obj_enc), keys,
+        return self._fwd(self.g_params, shard.put_sharded(net_enc),
+                         shard.put_sharded(obj_enc), shard.put_sharded(keys),
                          n_samples=self.cfg.noise_samples)
 
     def generator_probs(self, net_idx: np.ndarray, lat_obj, pow_obj,

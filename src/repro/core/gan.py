@@ -102,6 +102,14 @@ def discriminator_apply(params, net_enc, cfg_onehot, obj_enc,
     return L.mlp_apply(params, x, use_fused=use_fused, interpret=interpret)
 
 
+def replicate_params(params, mesh=None):
+    """Pin a params pytree replicated across the task mesh — the pure-DP
+    layout whose gradients GSPMD all-reduces over the batch axes.  No-op
+    when no mesh is active, so single-device callers are untouched."""
+    from repro.core import shard
+    return shard.replicate(params, mesh)
+
+
 def sample_noise_dim(rng, batch: int, noise_dim: int):
     """The canonical noise input ("small random numbers"): shared by G and
     the Large-MLP baseline, which §7.1.4 feeds the same noise as G."""

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import shard
 from repro.core.explorer import pow2_bucket
 from repro.design_models.base import DesignModel
 
@@ -246,6 +247,10 @@ def select_batch(
     metrics and `satisfied` come from one batched float64 host-oracle call.
     Task t's Selection equals ``select(model, net_idx[t],
     cand_idx[t][:n_candidates[t]], ..., use_jax=True)``.
+
+    Under an active task mesh (``shard.set_task_mesh``) with T a multiple
+    of the shard count, all inputs land task-sharded and the vmapped scan
+    partitions across devices — same per-lane update chain, same winners.
     """
     run = model.__dict__.get("_alg2_batch")
     if run is None:
@@ -255,8 +260,10 @@ def select_batch(
     lo = np.asarray(lat_obj, np.float64).reshape(-1)
     po = np.asarray(pow_obj, np.float64).reshape(-1)
     _, _, chosen = run(
-        jnp.asarray(net_idx), jnp.asarray(cand_idx), jnp.asarray(valid),
-        jnp.asarray(lo, jnp.float32), jnp.asarray(po, jnp.float32),
+        shard.put_sharded(net_idx), shard.put_sharded(cand_idx),
+        shard.put_sharded(valid),
+        shard.put_sharded(lo.astype(np.float32)),
+        shard.put_sharded(po.astype(np.float32)),
     )
     chosen = np.asarray(chosen)
     cand_host = np.asarray(cand_idx)

@@ -50,10 +50,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gan as G
+from repro.core import shard
 from repro.core.encoding import binary_log2_encode
 from repro.dataset.generator import Dataset
 from repro.design_models.base import DesignModel
 from repro.optim import adam, apply_updates
+from repro.train.shardings import axis_size
 
 
 @dataclasses.dataclass
@@ -127,16 +129,49 @@ def make_oracle(model: DesignModel, use_jax_oracle: Optional[bool] = None):
     return callback, False
 
 
+def _batch_constrainer(mesh):
+    """Sharding constraint pinning each batch leaf's leading (sample) axis
+    over the mesh's batch axes — the data-parallel layout of Algorithm 1.
+    Identity when the mesh has no task axes (or None), so the unsharded
+    trace is byte-identical to the pre-mesh one."""
+    axes = shard.task_axes(mesh)
+    if axes is None:
+        return lambda batch: batch
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    k = axis_size(mesh, axes)
+
+    def constrain(batch):
+        def pin(a):
+            if a.ndim == 0 or a.shape[0] % k != 0:
+                return a
+            spec = [None] * a.ndim
+            spec[0] = axes
+            return jax.lax.with_sharding_constraint(
+                a, NamedSharding(mesh, P(*spec)))
+        return jax.tree.map(pin, batch)
+
+    return constrain
+
+
 def _make_step_body(model: DesignModel, cfg: G.GANConfig,
-                    use_jax_oracle: Optional[bool] = None):
+                    use_jax_oracle: Optional[bool] = None,
+                    mesh=None):
     """The un-jitted Algorithm 1 update as a scan body over batches.
 
     Returns (g_optim, d_optim, step_body) where
     step_body(carry, batch) -> (carry, metrics) and
     carry = (g_params, d_params, g_opt, d_opt, rng).
+
+    With a `mesh`, each batch is constrained sample-sharded over the
+    mesh's batch axes inside the body: G/D forwards, the oracle, and both
+    backward passes partition row-wise, and the batch-mean losses make
+    GSPMD all-reduce the gradients over ('pod', 'data') — plain data
+    parallelism, params replicated.
     """
     space = model.space
     oracle, _ = make_oracle(model, use_jax_oracle)
+    constrain = _batch_constrainer(mesh)
 
     def losses_g(g_params, d_params, batch, noise):
         probs = G.generator_apply(g_params, space, batch["net_enc"],
@@ -178,6 +213,7 @@ def _make_step_body(model: DesignModel, cfg: G.GANConfig,
 
     def step_body(carry, batch):
         g_params, d_params, g_opt, d_opt, rng = carry
+        batch = constrain(batch)
         rng, nrng = jax.random.split(rng)
         noise = G.sample_noise(nrng, batch["net_enc"].shape[0], cfg)
         (loss_g, aux), g_grads = jax.value_and_grad(losses_g, has_aux=True)(
@@ -203,13 +239,16 @@ def _make_step_body(model: DesignModel, cfg: G.GANConfig,
 
 
 def make_train_step(model: DesignModel, cfg: G.GANConfig,
-                    use_jax_oracle: Optional[bool] = None):
+                    use_jax_oracle: Optional[bool] = None,
+                    mesh=None):
     """Build the jitted per-batch update implementing Algorithm 1.
 
     Kept as the single-batch entry point (benchmarks, tests); the epoch
     loop in ``train_gan`` scans the same body via ``make_epoch_fn``.
+    ``mesh``: see ``_make_step_body`` (data-parallel over its batch axes).
     """
-    g_optim, d_optim, step_body = _make_step_body(model, cfg, use_jax_oracle)
+    g_optim, d_optim, step_body = _make_step_body(model, cfg, use_jax_oracle,
+                                                  mesh=mesh)
 
     @jax.jit
     def step(g_params, d_params, g_opt, d_opt, batch, rng):
@@ -221,7 +260,8 @@ def make_train_step(model: DesignModel, cfg: G.GANConfig,
 
 
 def make_epoch_fn(model: DesignModel, cfg: G.GANConfig,
-                  use_jax_oracle: Optional[bool] = None):
+                  use_jax_oracle: Optional[bool] = None,
+                  mesh=None):
     """Whole-epoch update: one jitted scan over pre-gathered batches.
 
     epoch(carry, data, perm) -> (carry, metrics):
@@ -230,8 +270,15 @@ def make_epoch_fn(model: DesignModel, cfg: G.GANConfig,
       perm  = (n_batches, batch_size) int32 row indices for this epoch.
     The batch gather happens on device, so per-epoch host work is one
     permutation draw and one dispatch.
+
+    With a ``mesh``, hand in the carry replicated (``shard.replicate``),
+    the data replicated, and the perm sharded on its batch-size axis
+    (``shard.put_sharded(perm, axis=1)``): each device then gathers only
+    its own rows and the scanned step runs data-parallel end to end with
+    the donated carry staying replicated — what ``train_gan`` does.
     """
-    g_optim, d_optim, step_body = _make_step_body(model, cfg, use_jax_oracle)
+    g_optim, d_optim, step_body = _make_step_body(model, cfg, use_jax_oracle,
+                                                  mesh=mesh)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def epoch(carry, data, perm):
@@ -269,17 +316,31 @@ def train_gan(
     seed: int = 0,
     log_every: int = 0,
     use_jax_oracle: Optional[bool] = None,
+    mesh=None,
 ) -> TrainState:
     """Mini-batch alternating training (Algorithm 1, lines 1-21).
 
     Each iteration is one device-resident ``lax.scan`` over the epoch's
     batches; the dataset is encoded and uploaded exactly once.
+
+    ``mesh=None`` picks up the active task mesh (``shard.set_task_mesh``);
+    with one, each epoch runs data-parallel over the mesh's batch axes —
+    replicated donated carry, per-device row gathers, gradients
+    all-reduced over ('pod', 'data') — and falls back to the unsharded
+    path when the batch size does not divide the shard count.  Losses are
+    batch means either way, so sharded training matches single-device up
+    to float reduction order (pinned by tests/test_shard.py).
     """
+    mesh = shard.get_task_mesh() if mesh is None else mesh
+    if shard.n_task_shards(mesh) <= 1 or min(cfg.batch_size, ds.n) % \
+            shard.n_task_shards(mesh) != 0:
+        mesh = None
     rng = jax.random.PRNGKey(seed)
     rng, g_rng, d_rng = jax.random.split(rng, 3)
     g_params = G.init_generator(g_rng, cfg, model.space)
     d_params = G.init_discriminator(d_rng, cfg, model.space)
-    g_optim, d_optim, epoch = make_epoch_fn(model, cfg, use_jax_oracle)
+    g_optim, d_optim, epoch = make_epoch_fn(model, cfg, use_jax_oracle,
+                                            mesh=mesh)
     g_opt = g_optim.init(g_params)
     d_opt = d_optim.init(d_params)
 
@@ -288,13 +349,18 @@ def train_gan(
     bs = min(cfg.batch_size, n)
     n_batches = n // bs
     data = encode_dataset(model, ds)
+    if mesh is not None:
+        data = shard.replicate(data, mesh)
 
-    carry = (g_params, d_params, g_opt, d_opt, rng)
+    carry = shard.replicate(
+        (g_params, d_params, g_opt, d_opt, rng), mesh)
     history: List[Dict[str, float]] = []
     t0 = time.time()
     for it in range(iters):
         perm = np_rng.permutation(n)[: n_batches * bs]
-        perm = jnp.asarray(perm.reshape(n_batches, bs).astype(np.int32))
+        perm = perm.reshape(n_batches, bs).astype(np.int32)
+        perm = shard.put_sharded(perm, mesh, axis=1) if mesh is not None \
+            else jnp.asarray(perm)
         with warnings.catch_warnings():
             # CPU backends can't honor buffer donation; that is fine here.
             warnings.filterwarnings("ignore", message="Some donated buffers")

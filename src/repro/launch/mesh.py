@@ -34,7 +34,40 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     return _make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever this host has (CPU smoke tests: 1 device)."""
-    n = len(jax.devices())
-    return _make_mesh((n, 1), ("data", "model"))
+def make_host_mesh(shape: Optional[Tuple[int, ...]] = None,
+                   axes: Optional[Tuple[str, ...]] = None):
+    """Whatever this host has (CPU smoke tests: 1 device).
+
+    Default: all host devices as (data=n, model=1).  Pass ``shape``/``axes``
+    to override the factorization — e.g. ``shape=(2, 2)`` to exercise a
+    real 'model' axis on 4 fake CPU devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=4``), or
+    ``shape=(2, 1)`` for a submesh over the first 2 of N devices (how
+    ``bench_shard.py`` measures 1 -> N scaling in one process).  The shape
+    product must not exceed the host device count.
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    n = len(devices)
+    if shape is None:
+        assert axes is None, "axes override requires an explicit shape"
+        return _make_mesh((n, 1), ("data", "model"))
+    shape = tuple(int(s) for s in shape)
+    if axes is None:
+        axes = ("data", "model")[:len(shape)] if len(shape) <= 2 \
+            else ("pod", "data", "model")[:len(shape)]
+    if len(axes) != len(shape):
+        raise ValueError(f"mesh shape {shape} has {len(shape)} dims but "
+                         f"axes {axes} names {len(axes)}")
+    want = int(np.prod(shape))
+    if want > n:
+        raise ValueError(
+            f"mesh shape {shape} asks for {want} devices but this host has "
+            f"only {n} (len(jax.devices())); reduce the shape or raise "
+            f"--xla_force_host_platform_device_count")
+    if want == n:
+        return _make_mesh(shape, tuple(axes))
+    # submesh over the first `want` devices (jax.make_mesh always takes all)
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:want]).reshape(shape), tuple(axes))

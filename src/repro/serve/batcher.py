@@ -13,6 +13,12 @@ pattern is.
 Per-request seeds ride along as a (T,) array (`task_keys` array form), so
 a request's Selection never depends on which micro-batch it landed in or
 at which position.
+
+Under an active task mesh the padded size is additionally a multiple of
+the shard count — ``n_shards * pow2_bucket(ceil(m / n_shards))`` — so one
+sharded dispatch serves the whole micro-batch with every device lane full
+(``n_shards=None`` reads ``shard.active_n_shards()`` at formation time;
+1 shard reproduces the old sizing exactly).
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import shard
 from repro.core.explorer import pow2_bucket
 from repro.dataset.generator import DSETask
 from repro.serve.request import DSERequest
@@ -53,11 +60,20 @@ class MicroBatch:
 class MicroBatcher:
     """Per-model FIFO admission queues + micro-batch formation."""
 
-    def __init__(self, max_batch: int = 64, pad_pow2: bool = True):
+    def __init__(self, max_batch: int = 64, pad_pow2: bool = True,
+                 n_shards: Optional[int] = None):
         assert max_batch >= 1
         self.max_batch = int(max_batch)
         self.pad_pow2 = bool(pad_pow2)
+        #: None = follow the active task mesh (read per batch formation, so
+        #: installing a mesh mid-serve takes effect on the next dispatch)
+        self.n_shards = n_shards if n_shards is None else int(n_shards)
         self._queues: "OrderedDict[str, Deque[DSERequest]]" = OrderedDict()
+
+    def _shards(self) -> int:
+        k = self.n_shards if self.n_shards is not None \
+            else shard.active_n_shards()
+        return max(1, int(k))
 
     def admit(self, req: DSERequest) -> None:
         self._queues.setdefault(req.model_name, deque()).append(req)
@@ -80,8 +96,16 @@ class MicroBatcher:
     def next_batch(self, model_name: Optional[str] = None) -> Optional[MicroBatch]:
         """Pop up to ``max_batch`` queued requests (FIFO; round-robin over
         models when ``model_name`` is None) and coalesce them into one
-        padded micro-batch.  Returns None when nothing is queued."""
-        if model_name is None:
+        padded micro-batch.  Returns None when nothing is queued.
+
+        A queue drained by the pop is pruned from the table (the dict used
+        to grow one dead entry per retired model under model churn), and
+        the round-robin order rotates only on round-robin pops — a
+        targeted ``next_batch(model_name=...)`` no longer steals the
+        models behind the target their turn.
+        """
+        round_robin = model_name is None
+        if round_robin:
             work = self.models_with_work()
             if not work:
                 return None
@@ -90,13 +114,20 @@ class MicroBatcher:
         if not q:
             return None
         reqs = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
-        # rotate this model to the back so multi-model queues share dispatches
-        self._queues.move_to_end(model_name)
+        if not q:
+            del self._queues[model_name]
+        elif round_robin:
+            # rotate to the back so multi-model queues share dispatches
+            self._queues.move_to_end(model_name)
 
         m = len(reqs)
         tasks = DSETask.concat([r.as_task() for r in reqs])
         seeds = np.array([r.seed for r in reqs], np.int64)
-        target = pow2_bucket(m, floor=1) if self.pad_pow2 else m
+        k = self._shards()
+        per_shard = -(-m // k)       # ceil(m / k)
+        if self.pad_pow2:
+            per_shard = pow2_bucket(per_shard, floor=1)
+        target = per_shard * k
         if target > m:
             rows = np.concatenate([np.arange(m),
                                    np.full(target - m, m - 1)])

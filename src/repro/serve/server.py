@@ -51,6 +51,9 @@ class ServeConfig:
                                       # pushed onto every registered engine
                                       # (None = leave the engine's own
                                       # setting / backend auto)
+    n_shards: Optional[int] = None   # micro-batch shard multiple; None =
+                                     # follow the active task mesh
+                                     # (repro.core.shard), 1 = never shard
 
 
 class DSEServer:
@@ -61,7 +64,8 @@ class DSEServer:
         self.cfg = cfg or ServeConfig()
         self.engines: Dict[str, DSEMethod] = {}
         self.cache = ResultCache(self.cfg.cache_capacity)
-        self.batcher = MicroBatcher(self.cfg.max_batch, self.cfg.pad_pow2)
+        self.batcher = MicroBatcher(self.cfg.max_batch, self.cfg.pad_pow2,
+                                    n_shards=self.cfg.n_shards)
         self._next_rid = 0
         # key -> rids of identical requests riding the queued one
         self._followers: Dict[Tuple, List[int]] = {}
@@ -259,5 +263,12 @@ class DSEServer:
             "backend": jax.default_backend(),
             "fused": {name: engine_route(e)
                       for name, e in sorted(self.engines.items())},
+        }
+        from repro.core import shard as _shard
+        mesh = _shard.get_task_mesh()
+        s["sharding"] = {
+            "n_shards": self.batcher._shards(),
+            "mesh": dict(mesh.shape) if mesh is not None else None,
+            "task_axes": _shard.task_axes(mesh),
         }
         return s

@@ -54,7 +54,28 @@ def axis_size(mesh: Mesh, name) -> int:
     return mesh.shape.get(name, 1) if name in mesh.shape else 1
 
 
+def norm_axes(axes, mesh: Optional[Mesh] = None):
+    """Normalize a PartitionSpec axis entry: drop axes the mesh lacks or
+    holds at size 1 (sharding over them is a no-op), and collapse the empty
+    result to None.  ``PartitionSpec((), ...)`` is not a valid spec — an
+    empty batch-axes tuple used to leak through ``_div`` (vacuously true:
+    ``batch % 1 == 0``) and poison ``activation_spec``/``state_spec`` on
+    meshes without a 'pod'/'data' axis."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    if mesh is not None:
+        axes = tuple(a for a in axes if axis_size(mesh, a) > 1)
+    return axes if axes else None
+
+
 def _div(dim: int, mesh: Mesh, name) -> bool:
+    """True iff `name` names real (present, size > 1) mesh axes whose
+    product divides `dim` — absent axes no longer "divide" via their
+    size-1 fallback, so rules fall back to replication instead of
+    emitting specs that reference axes the mesh does not have."""
+    name = norm_axes(name, mesh)
     return name is not None and dim % axis_size(mesh, name) == 0
 
 
@@ -73,8 +94,9 @@ def constrain(x, spec: P):
 def activation_spec(mesh: Mesh, batch: int, d_model: int,
                     seq: Optional[int] = None) -> P:
     """(B, S, D) residual-stream spec (policy set by use_mesh act_shard)."""
-    ba = batch_axes(mesh)
-    b_ax = ba if _div(batch, mesh, ba) else (("data",) if _div(batch, mesh, "data") else None)
+    ba = norm_axes(batch_axes(mesh), mesh)
+    b_ax = ba if _div(batch, mesh, ba) \
+        else (norm_axes("data", mesh) if _div(batch, mesh, "data") else None)
     policy = _CTX["act_shard"]
     if policy == "seq" and seq is not None and _div(seq, mesh, "model"):
         return P(b_ax, "model", None)
@@ -176,13 +198,13 @@ def state_spec(shape: Tuple[int, ...], mesh: Mesh, batch: int) -> P:
     if rank < 2:
         return P(*spec)
     used_model = False
-    ba = batch_axes(mesh)
+    ba = norm_axes(batch_axes(mesh), mesh)
     data_used = False
     if shape[1] == batch and _div(batch, mesh, ba):
         spec[1] = ba
         data_used = True
     elif shape[1] == batch and _div(batch, mesh, "data"):
-        spec[1] = "data"
+        spec[1] = norm_axes("data", mesh)
         data_used = True
     # remaining dims, largest first: give 'data' (if free) to the largest
     # (the 500k sequence axis), 'model' to the next largest divisible.
