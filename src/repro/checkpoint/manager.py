@@ -1,16 +1,29 @@
-"""Sharded checkpoint manager: atomic, keep-N, auto-resume.
+"""Sharded checkpoint manager: atomic, checksummed, keep-N, auto-resume.
 
-Layout:  <dir>/step_<n>/host_<i>.npz + manifest.json (written last, via
-atomic rename, so a partially-written checkpoint is never resumable).
-Each host writes only the leaves (or leaf-shards) it owns; on this
-single-host container host_0 holds everything, but the format and the
+Layout:  <dir>/step_<n>/host_<i>.npz + manifest.json (written last — temp
+file + ``os.replace`` inside the staging dir, then the whole step dir is
+published by a single rename — so a partially-written checkpoint is never
+resumable and the previous checkpoint for the same step survives a crash
+mid-save).  Each host writes only the leaves (or leaf-shards) it owns; on
+this single-host container host_0 holds everything, but the format and the
 restore path are multi-host shaped (restore validates the manifest's
 host_count and step).
 
-Fault-tolerance contract used by launch/train.py:
+Integrity: the manifest records a crc32 per leaf; ``restore`` and
+``verify`` recompute them and raise `CheckpointCorruptionError` (with the
+offending file and leaf) on any mismatch or unreadable payload — a
+corrupted checkpoint must be *detected at swap time*, never silently
+attached as garbage params (the serving tier's corrupted-swap recovery,
+exercised by `repro.serve.faults.corrupt_checkpoint` and
+`benchmarks/bench_load.py`).
+
+Fault-tolerance contract used by launch/train.py and the serving tier:
   * save(step, tree) never corrupts the previous checkpoint;
-  * latest_step() -> most recent step with a valid manifest;
-  * restore(step, like) -> pytree matching `like`'s structure/dtypes.
+  * latest_step() -> most recent step with a valid (parseable) manifest;
+  * restore(step, like) -> pytree matching `like`'s structure/dtypes, or
+    CheckpointCorruptionError — GANDSE.attach-compatible: `like` may be
+    live generator params (only shape/dtype metadata is consulted) and the
+    restored tree feeds straight into `GANDSE.attach` / `DSEServer.swap`.
 """
 from __future__ import annotations
 
@@ -20,16 +33,27 @@ import os
 import shutil
 import tempfile
 import time
+import zlib
 from typing import Any, List, Optional
 
 import jax
 import numpy as np
 
 
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint failed integrity validation (checksum mismatch, missing
+    or unreadable payload).  Callers recover by falling back to the last
+    valid step — never by attaching the damaged tree."""
+
+
 def _flatten_with_names(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     names = [f"leaf_{i}" for i in range(len(leaves))]
     return leaves, names, treedef
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 @dataclasses.dataclass
@@ -49,6 +73,10 @@ class CheckpointManager:
     def _manifest(self, step: int) -> str:
         return os.path.join(self._step_dir(step), "manifest.json")
 
+    def _payload(self, step: int) -> str:
+        return os.path.join(self._step_dir(step),
+                            f"host_{self.host_index}.npz")
+
     # ---- save ----------------------------------------------------------------
     def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> str:
         leaves, names, _ = _flatten_with_names(tree)
@@ -62,13 +90,29 @@ class CheckpointManager:
                 "time": time.time(),
                 "host_count": self.host_count,
                 "n_leaves": len(leaves),
+                "checksums": {n: _crc(a) for n, a in arrs.items()},
                 "extra": extra or {},
             }
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            # manifest last, via temp file + os.replace: its presence (and
+            # parseability) is what marks the step complete
+            mtmp = os.path.join(tmp, ".manifest.json.tmp")
+            with open(mtmp, "w") as f:
                 json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(mtmp, os.path.join(tmp, "manifest.json"))
             if os.path.exists(sdir):
-                shutil.rmtree(sdir)
-            os.rename(tmp, sdir)           # atomic publish
+                # keep the old step alive until the new one is in place
+                # (a crash between these renames leaves the aside copy,
+                # invisible to steps(), instead of zero checkpoints)
+                aside = os.path.join(self.directory,
+                                     f".old_step_{step:09d}")
+                shutil.rmtree(aside, ignore_errors=True)
+                os.rename(sdir, aside)
+                os.rename(tmp, sdir)           # atomic publish
+                shutil.rmtree(aside, ignore_errors=True)
+            else:
+                os.rename(tmp, sdir)           # atomic publish
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
@@ -79,22 +123,63 @@ class CheckpointManager:
     def steps(self) -> List[int]:
         out = []
         for d in os.listdir(self.directory):
-            if d.startswith("step_") and os.path.exists(
-                    os.path.join(self.directory, d, "manifest.json")):
-                out.append(int(d.split("_")[1]))
+            if not d.startswith("step_"):
+                continue
+            mpath = os.path.join(self.directory, d, "manifest.json")
+            try:
+                with open(mpath) as f:
+                    json.load(f)
+            except (OSError, ValueError):
+                continue               # absent or torn manifest: not resumable
+            out.append(int(d.split("_")[1]))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
 
-    def restore(self, step: int, like: Any) -> Any:
+    def _load_manifest(self, step: int) -> dict:
         with open(self._manifest(step)) as f:
-            manifest = json.load(f)
+            return json.load(f)
+
+    def verify(self, step: int) -> dict:
+        """Validate one step's payload against its manifest checksums
+        without building the output tree; returns the manifest.  Raises
+        `CheckpointCorruptionError` on any mismatch — the pre-swap gate."""
+        manifest = self._load_manifest(step)
+        self._verified_arrays(step, manifest)
+        return manifest
+
+    def _verified_arrays(self, step: int, manifest: dict) -> dict:
+        path = self._payload(step)
+        try:
+            with np.load(path) as data:
+                arrs = {n: data[n] for n in data.files}
+        except Exception as e:
+            raise CheckpointCorruptionError(
+                f"checkpoint step {step}: unreadable payload {path}: "
+                f"{e}") from e
+        sums = manifest.get("checksums")
+        if sums is not None:           # absent on pre-checksum checkpoints
+            for n, want in sums.items():
+                if n not in arrs:
+                    raise CheckpointCorruptionError(
+                        f"checkpoint step {step}: leaf '{n}' missing "
+                        f"from {path}")
+                got = _crc(arrs[n])
+                if got != int(want):
+                    raise CheckpointCorruptionError(
+                        f"checkpoint step {step}: checksum mismatch on "
+                        f"leaf '{n}' of {path} (stored {want}, "
+                        f"recomputed {got}) — refusing to restore "
+                        f"corrupted params")
+        return arrs
+
+    def restore(self, step: int, like: Any) -> Any:
+        manifest = self._load_manifest(step)
         leaves, names, treedef = _flatten_with_names(like)
         assert manifest["n_leaves"] == len(leaves), "tree structure changed"
-        data = np.load(os.path.join(self._step_dir(step),
-                                    f"host_{self.host_index}.npz"))
+        data = self._verified_arrays(step, manifest)
         new_leaves = []
         for n, l in zip(names, leaves):
             arr = data[n]
@@ -104,9 +189,20 @@ class CheckpointManager:
             new_leaves.append(arr.astype(l.dtype))
         return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
+    def restore_latest(self, like: Any):
+        """(step, tree) of the newest step that passes validation, skipping
+        corrupted ones (each raises internally and is passed over), or
+        None when no step restores cleanly — the swap-time recovery path:
+        a damaged newest checkpoint falls back to the previous good one."""
+        for step in reversed(self.steps()):
+            try:
+                return step, self.restore(step, like)
+            except CheckpointCorruptionError:
+                continue
+        return None
+
     def restore_extra(self, step: int) -> dict:
-        with open(self._manifest(step)) as f:
-            return json.load(f)["extra"]
+        return self._load_manifest(step)["extra"]
 
     # ---- gc ----------------------------------------------------------------
     def _gc(self):

@@ -1,7 +1,7 @@
 """DSE serving driver: micro-batching loop over a request queue.
 
   PYTHONPATH=src python -m repro.launch.dse_serve --model im2col \
-      --requests 64 --max-batch 16
+      --requests 64 --max-batch 16 [--concurrent]
 
 The DSE twin of `repro.launch.serve` (the LM continuous-batching driver):
 requests are admitted into a `DSEServer`, coalesced into pow2-bucketed
@@ -10,6 +10,13 @@ and answered with per-request `DSEResult`s.  A random-init generator is
 attached by default (serving throughput does not depend on training
 quality); pass --train-iters to train first and report real satisfied
 counts.
+
+``--concurrent`` serves the same workload through the production front
+end (`repro.serve.frontend.ServeFrontend`): non-blocking submits with
+futures, continuous batching overlapping host-side batch formation with
+in-flight device compute, and admission control — pair with --max-queue
+(bounded queues, shed-at-the-door) and --deadline-s (per-request
+deadlines) to see load shedding in the report.
 """
 from __future__ import annotations
 
@@ -53,6 +60,17 @@ def main(argv=None) -> int:
     ap.add_argument("--fused", choices=("auto", "on", "off"), default="auto",
                     help="Pallas fused-MLP dispatch: auto = backend rule "
                          "(TPU on, CPU/GPU off), on/off force it")
+    ap.add_argument("--concurrent", action="store_true",
+                    help="serve through the threaded production front end "
+                         "(futures + continuous batching) instead of the "
+                         "sync submit/drain pump")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="per-model admission bound; submissions past it "
+                         "are REJECTED with a retry-after hint (0 = "
+                         "unbounded)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request deadline for --concurrent; expired "
+                         "requests are shed before dispatch (0 = none)")
     args = ap.parse_args(argv)
     use_fused = {"auto": None, "on": True, "off": False}[args.fused]
 
@@ -71,6 +89,7 @@ def main(argv=None) -> int:
 
     srv = DSEServer(ServeConfig(max_batch=args.max_batch,
                                 cache_capacity=args.cache,
+                                max_queue=args.max_queue,
                                 use_fused=use_fused))
     srv.register(engine)
 
@@ -86,34 +105,59 @@ def main(argv=None) -> int:
     srv.drain()
     srv.cache.clear()
 
+    fe_line = ""
     t0 = time.time()
-    for i in range(n):
-        srv.submit(model.name, tasks.net_idx[i], tasks.lat_obj[i],
-                   tasks.pow_obj[i], seed=args.seed + i)
-    # duplicates of still-queued requests coalesce (dispatch once)...
-    for i in range(n_rep):
-        srv.submit(model.name, tasks.net_idx[i], tasks.lat_obj[i],
-                   tasks.pow_obj[i], seed=args.seed + i)
-    responses = srv.drain()
-    # ...and verbatim repeats of served requests hit the LRU cache
-    for i in range(n_rep):
-        srv.submit(model.name, tasks.net_idx[i], tasks.lat_obj[i],
-                   tasks.pow_obj[i], seed=args.seed + i)
-    responses += srv.drain()
+    if args.concurrent:
+        from repro.serve import FrontendConfig, ServeFrontend
+        timeout_s = args.deadline_s if args.deadline_s > 0 else None
+
+        def push(fe, rows):
+            return [fe.submit(model.name, tasks.net_idx[i], tasks.lat_obj[i],
+                              tasks.pow_obj[i], seed=args.seed + i,
+                              timeout_s=timeout_s) for i in rows]
+
+        with ServeFrontend(srv, FrontendConfig()) as fe:
+            # duplicates submitted while the originals are in flight
+            # coalesce (or hit the cache, depending on dispatch timing)...
+            futs = push(fe, range(n)) + push(fe, range(n_rep))
+            responses = [f.result(timeout=300) for f in futs]
+            # ...and verbatim repeats of served requests hit the LRU cache
+            responses += [f.result(timeout=300)
+                          for f in push(fe, range(n_rep))]
+            m = fe.metrics()["frontend"]["latency"]
+            fe_line = (f"p50={m['p50_ms']:.1f}ms p99={m['p99_ms']:.1f}ms "
+                       f"rejected={srv.stats['rejected']} "
+                       f"degraded={srv.stats['degraded_entered']} ")
+    else:
+        for i in range(n):
+            srv.submit(model.name, tasks.net_idx[i], tasks.lat_obj[i],
+                       tasks.pow_obj[i], seed=args.seed + i)
+        # duplicates of still-queued requests coalesce (dispatch once)...
+        for i in range(n_rep):
+            srv.submit(model.name, tasks.net_idx[i], tasks.lat_obj[i],
+                       tasks.pow_obj[i], seed=args.seed + i)
+        responses = srv.drain()
+        # ...and verbatim repeats of served requests hit the LRU cache
+        for i in range(n_rep):
+            srv.submit(model.name, tasks.net_idx[i], tasks.lat_obj[i],
+                       tasks.pow_obj[i], seed=args.seed + i)
+        responses += srv.drain()
     dt = time.time() - t0
 
     n_total = n + 2 * n_rep
     s = srv.summary()
-    stats = summarize([r.result for r in responses])
+    served = [r.result for r in responses if r.ok]
+    stats = summarize(served)
     print(f"[dse_serve] model={model.name} "
+          f"mode={'concurrent' if args.concurrent else 'sync'} "
           f"kernels={s['kernels']['backend']}:"
           f"{'fused' if s['kernels']['fused'][model.name] else 'jnp'} "
-          f"requests={len(responses)}/{n_total} "
+          f"requests={len(responses)}/{n_total} served={len(served)} "
           f"batches={s['batches']} mean_batch={s['mean_batch_size']:.1f} "
           f"coalesced={s['coalesced']} cache_hits={s['cache']['hits']} "
-          f"satisfied={stats['n_satisfied']} "
+          f"satisfied={stats['n_satisfied']} {fe_line}"
           f"req/s={len(responses)/max(dt, 1e-9):.0f}")
-    assert len(responses) == n_total
+    assert len(responses) == n_total   # every request terminated
     assert s["pending"] == 0
     return 0
 

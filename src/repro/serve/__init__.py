@@ -3,11 +3,18 @@
 Single DSE requests -> per-model queues -> pow2-bucketed micro-batches ->
 one `explore_tasks` dispatch each -> per-request `DSEResult`s, with an LRU
 result cache and a multi-model registry with params hot-swap.  See
-`repro.serve.server.DSEServer` for the full semantics.
+`repro.serve.server.DSEServer` for the sync event-loop semantics and
+`repro.serve.frontend.ServeFrontend` for the concurrent production front
+end (futures, continuous batching, admission control, deadlines, load
+shedding); `repro.serve.faults` injects faults for the soak harness.
 """
 from repro.serve.batcher import MicroBatch, MicroBatcher  # noqa: F401
 from repro.serve.cache import ResultCache  # noqa: F401
+from repro.serve.faults import (FaultPlan, FaultyEngine,  # noqa: F401
+                                InjectedFault, corrupt_checkpoint)
+from repro.serve.frontend import FrontendConfig, ServeFrontend  # noqa: F401
 from repro.serve.request import (DSERequest, DSEResponse,  # noqa: F401
                                  SOURCE_CACHE, SOURCE_COALESCED,
-                                 SOURCE_DISPATCH, SOURCE_FAILED)
+                                 SOURCE_DISPATCH, SOURCE_FAILED,
+                                 SOURCE_REJECTED)
 from repro.serve.server import DSEServer, ServeConfig  # noqa: F401

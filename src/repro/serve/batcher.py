@@ -19,12 +19,19 @@ the shard count — ``n_shards * pow2_bucket(ceil(m / n_shards))`` — so one
 sharded dispatch serves the whole micro-batch with every device lane full
 (``n_shards=None`` reads ``shard.active_n_shards()`` at formation time;
 1 shard reproduces the old sizing exactly).
+
+Thread safety: every queue operation holds one internal lock, so the
+concurrent front end can admit from submitter threads while the former
+thread pops micro-batches — admit/next_batch/requeue/shed interleave
+atomically and no request is ever lost or double-popped (pinned by
+tests/test_serve_concurrency.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict, deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -69,6 +76,7 @@ class MicroBatcher:
         #: installing a mesh mid-serve takes effect on the next dispatch)
         self.n_shards = n_shards if n_shards is None else int(n_shards)
         self._queues: "OrderedDict[str, Deque[DSERequest]]" = OrderedDict()
+        self._lock = threading.RLock()
 
     def _shards(self) -> int:
         k = self.n_shards if self.n_shards is not None \
@@ -76,49 +84,81 @@ class MicroBatcher:
         return max(1, int(k))
 
     def admit(self, req: DSERequest) -> None:
-        self._queues.setdefault(req.model_name, deque()).append(req)
+        with self._lock:
+            self._queues.setdefault(req.model_name, deque()).append(req)
 
     def requeue_front(self, reqs: List[DSERequest]) -> None:
         """Push popped requests back to the head of their queue in their
         original order (dispatch-failure recovery: nothing is lost, the
         next step retries them)."""
-        for req in reversed(reqs):
-            self._queues.setdefault(req.model_name, deque()).appendleft(req)
+        with self._lock:
+            for req in reversed(reqs):
+                self._queues.setdefault(req.model_name,
+                                        deque()).appendleft(req)
 
     def pending(self, model_name: Optional[str] = None) -> int:
-        if model_name is not None:
-            return len(self._queues.get(model_name, ()))
-        return sum(len(q) for q in self._queues.values())
+        with self._lock:
+            if model_name is not None:
+                return len(self._queues.get(model_name, ()))
+            return sum(len(q) for q in self._queues.values())
 
     def models_with_work(self) -> List[str]:
-        return [m for m, q in self._queues.items() if q]
+        with self._lock:
+            return [m for m, q in self._queues.items() if q]
 
-    def next_batch(self, model_name: Optional[str] = None) -> Optional[MicroBatch]:
+    def shed(self, predicate: Callable[[DSERequest], bool]
+             ) -> List[DSERequest]:
+        """Remove (and return) every queued request matching ``predicate``,
+        preserving FIFO order among survivors and pruning drained queues.
+        The admission-control hook: the server sheds expired-deadline
+        requests here, *before* they can occupy a dispatch slot."""
+        with self._lock:
+            out: List[DSERequest] = []
+            for name in list(self._queues):
+                q = self._queues[name]
+                kept = deque()
+                for req in q:
+                    (out if predicate(req) else kept).append(req)
+                if kept:
+                    self._queues[name] = kept
+                else:
+                    del self._queues[name]
+            return out
+
+    def next_batch(self, model_name: Optional[str] = None,
+                   rotate: Optional[bool] = None) -> Optional[MicroBatch]:
         """Pop up to ``max_batch`` queued requests (FIFO; round-robin over
         models when ``model_name`` is None) and coalesce them into one
         padded micro-batch.  Returns None when nothing is queued.
 
         A queue drained by the pop is pruned from the table (the dict used
         to grow one dead entry per retired model under model churn), and
-        the round-robin order rotates only on round-robin pops — a
-        targeted ``next_batch(model_name=...)`` no longer steals the
-        models behind the target their turn.
+        the round-robin order rotates only on round-robin pops (``rotate``
+        defaults to exactly that) — a targeted ``next_batch(model_name=…)``
+        does not steal the models behind the target their turn.  The
+        server's backoff-aware formation passes an explicit model *and*
+        ``rotate=True``: it pre-selects the round-robin head itself (to
+        skip models in a retry-backoff window) and the rotation must still
+        happen.
         """
-        round_robin = model_name is None
-        if round_robin:
-            work = self.models_with_work()
-            if not work:
+        with self._lock:
+            round_robin = model_name is None
+            if round_robin:
+                work = self.models_with_work()
+                if not work:
+                    return None
+                model_name = work[0]
+            if rotate is None:
+                rotate = round_robin
+            q = self._queues.get(model_name)
+            if not q:
                 return None
-            model_name = work[0]
-        q = self._queues.get(model_name)
-        if not q:
-            return None
-        reqs = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
-        if not q:
-            del self._queues[model_name]
-        elif round_robin:
-            # rotate to the back so multi-model queues share dispatches
-            self._queues.move_to_end(model_name)
+            reqs = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
+            if not q:
+                del self._queues[model_name]
+            elif rotate:
+                # rotate to the back so multi-model queues share dispatches
+                self._queues.move_to_end(model_name)
 
         m = len(reqs)
         tasks = DSETask.concat([r.as_task() for r in reqs])

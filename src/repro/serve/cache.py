@@ -6,9 +6,16 @@ that determine a Selection under the batched-vs-sequential parity contract
 placement), so a hit is indistinguishable from a recompute.  A hot-swap of
 an engine's params (`DSEServer.swap`) invalidates that model's entries:
 the key does not carry a params version, the swap does.
+
+Thread safety: every operation holds one internal lock, so the concurrent
+front end (`repro.serve.frontend`) can hit the cache from submitter
+threads while the dispatcher publishes — get/put/invalidate interleave
+atomically and the LRU order, stat counters, and capacity bound stay
+consistent (pinned by tests/test_serve_concurrency.py).
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Optional, Tuple
 
@@ -21,45 +28,52 @@ class ResultCache:
     def __init__(self, capacity: int = 4096):
         self.capacity = int(capacity)
         self._d: "OrderedDict[Tuple, DSEResult]" = OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
     def get(self, key: Tuple) -> Optional[DSEResult]:
         if self.capacity <= 0:
             return None
-        hit = self._d.get(key)
-        if hit is None:
-            self.misses += 1
-            return None
-        self._d.move_to_end(key)
-        self.hits += 1
-        return hit
+        with self._lock:
+            hit = self._d.get(key)
+            if hit is None:
+                self.misses += 1
+                return None
+            self._d.move_to_end(key)
+            self.hits += 1
+            return hit
 
     def put(self, key: Tuple, result: DSEResult) -> None:
         if self.capacity <= 0:
             return
-        self._d[key] = result
-        self._d.move_to_end(key)
-        while len(self._d) > self.capacity:
-            self._d.popitem(last=False)
-            self.evictions += 1
+        with self._lock:
+            self._d[key] = result
+            self._d.move_to_end(key)
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+                self.evictions += 1
 
     def invalidate_model(self, model_name: str) -> int:
         """Drop every entry of one model (key[0] is the model name); returns
         how many were dropped.  Called on params hot-swap."""
-        stale = [k for k in self._d if k[0] == model_name]
-        for k in stale:
-            del self._d[k]
-        return len(stale)
+        with self._lock:
+            stale = [k for k in self._d if k[0] == model_name]
+            for k in stale:
+                del self._d[k]
+            return len(stale)
 
     def clear(self) -> None:
-        self._d.clear()
+        with self._lock:
+            self._d.clear()
 
     def stats(self) -> dict:
-        return {"size": len(self._d), "capacity": self.capacity,
-                "hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions}
+        with self._lock:
+            return {"size": len(self._d), "capacity": self.capacity,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}

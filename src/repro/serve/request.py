@@ -5,7 +5,18 @@ parsed network (net-space indices), the two objectives `metric <= x`, and
 the noise seed that makes the query reproducible.  The server answers with
 a `DSEResponse` wrapping the engine's `DSEResult` plus serving metadata
 (which micro-batch carried it, whether it was a cache hit or coalesced
-onto an identical in-flight request).
+onto an identical in-flight request, whether the degraded host route
+computed it).
+
+Terminal states — every admitted request reaches exactly one:
+
+- ``dispatch`` / ``cache`` / ``coalesced``: answered with a result;
+- ``failed``: the engine kept raising past the retry cap (``error`` holds
+  the last exception's message) — the work was attempted and lost;
+- ``rejected``: admission control shed the request *before* dispatch
+  (queue full, deadline expired, or server shutdown) — the work was never
+  attempted, and ``retry_after`` hints when resubmission is likely to be
+  admitted.
 """
 from __future__ import annotations
 
@@ -22,6 +33,8 @@ SOURCE_DISPATCH = "dispatch"     # computed by this micro-batch
 SOURCE_CACHE = "cache"           # LRU hit from an earlier dispatch
 SOURCE_COALESCED = "coalesced"   # rode an identical in-flight request
 SOURCE_FAILED = "failed"         # dispatch kept failing; gave up (see error)
+SOURCE_REJECTED = "rejected"     # shed before dispatch (queue bound, expired
+                                 # deadline, or shutdown); see retry_after
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,10 +47,16 @@ class DSERequest:
     lat_obj: float               # latency objective, seconds
     pow_obj: float               # power objective, watts
     seed: int = 0                # per-request noise seed
+    deadline: Optional[float] = None  # time.monotonic() expiry; expired
+                                      # requests are shed at batch formation
+                                      # (best effort: a request already in a
+                                      # formed batch is served late instead)
 
     @property
     def key(self) -> Tuple:
-        """Result-cache identity (see `repro.core.dse_api.cache_key`)."""
+        """Result-cache identity (see `repro.core.dse_api.cache_key`).
+        The deadline is serving metadata, not task identity: two requests
+        for the same work coalesce regardless of their deadlines."""
         return cache_key(self.model_name, self.net_idx, self.lat_obj,
                          self.pow_obj, self.seed)
 
@@ -45,12 +64,17 @@ class DSERequest:
         """This request as a 1-row task batch."""
         return DSETask.single(self.net_idx, self.lat_obj, self.pow_obj)
 
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now >= self.deadline
+
 
 @dataclasses.dataclass
 class DSEResponse:
     """The server's answer to one request.  ``result`` is None only for
-    SOURCE_FAILED responses (the engine kept raising past the retry cap);
-    ``error`` then carries the last exception's message."""
+    SOURCE_FAILED (the engine kept raising past the retry cap; ``error``
+    carries the last exception's message) and SOURCE_REJECTED (admission
+    control shed the request before dispatch; ``retry_after`` hints the
+    resubmission delay in seconds) responses."""
 
     rid: int
     model_name: str
@@ -58,10 +82,17 @@ class DSEResponse:
     source: str = SOURCE_DISPATCH
     batch_size: int = 1          # real (unpadded) rows in the carrying batch
     error: Optional[str] = None
+    retry_after: Optional[float] = None  # REJECTED only: resubmit-after hint, s
+    degraded: bool = False       # computed by the sequential host-oracle
+                                 # fallback route (device route was failing)
 
     @property
     def cached(self) -> bool:
         return self.source == SOURCE_CACHE
+
+    @property
+    def rejected(self) -> bool:
+        return self.source == SOURCE_REJECTED
 
     @property
     def ok(self) -> bool:

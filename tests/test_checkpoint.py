@@ -1,0 +1,183 @@
+"""Crash-safe checkpointing: integrity validation and swap-time recovery.
+
+`test_substrate.py` pins the basic roundtrip/keep-N/partial-write
+behavior; this module pins the robustness contract this layer owes the
+serving tier:
+
+- checksummed restore: byte corruption in a payload raises
+  `CheckpointCorruptionError` (with a message naming the damaged leaf)
+  from both `verify` and `restore` — never a silently-garbage tree;
+- `restore_latest` skips corrupted steps and lands on the newest valid
+  one (the corrupted-params-on-swap recovery path);
+- a re-save of an existing step never destroys the previous copy, even
+  when the new write blows up mid-flight;
+- the saved/restored tree is `GANDSE.attach`-compatible: generator params
+  restored from disk produce Selection-identical exploration.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (CheckpointCorruptionError,
+                                      CheckpointManager)
+from repro.core import gan as G
+from repro.core.dse_api import GANDSE
+from repro.core.explorer import ExplorerConfig
+from repro.dataset.generator import generate_tasks
+from repro.design_models.dnnweaver import DnnWeaverModel
+from repro.serve.faults import corrupt_checkpoint
+
+MODEL = DnnWeaverModel()
+
+
+def _tree(seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {"w": (rng.standard_normal((8, 4)) * scale).astype(np.float32),
+            "b": np.arange(4, dtype=np.float32) * scale}
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_corrupted_payload_raises_on_restore_and_verify(tmp_path):
+    ck = CheckpointManager(str(tmp_path))
+    tree = _tree(0)
+    sdir = ck.save(1, tree)
+    ck.verify(1)                                    # pristine: passes
+    corrupt_checkpoint(sdir, seed=3)
+    with pytest.raises(CheckpointCorruptionError) as ei:
+        ck.restore(1, tree)
+    msg = str(ei.value)
+    assert "step 1" in msg and ("checksum mismatch" in msg
+                                or "unreadable payload" in msg)
+    with pytest.raises(CheckpointCorruptionError):
+        ck.verify(1)
+    # corruption is detected, not hidden: the step still *lists* (its
+    # manifest is intact) so operators can see and inspect the damage
+    assert ck.steps() == [1]
+
+
+def test_restore_latest_skips_corrupted_newest(tmp_path):
+    """The swap-time recovery path: newest checkpoint damaged -> fall back
+    to the previous good step instead of attaching garbage."""
+    ck = CheckpointManager(str(tmp_path), keep_n=0)
+    good = _tree(1, scale=2.0)
+    ck.save(1, _tree(0))
+    ck.save(2, good)
+    newest = ck.save(3, _tree(2, scale=3.0))
+    corrupt_checkpoint(newest, seed=7)
+    got = ck.restore_latest(good)
+    assert got is not None
+    step, tree = got
+    assert step == 2
+    _assert_tree_equal(tree, good)
+
+
+def test_restore_latest_none_when_all_corrupted(tmp_path):
+    ck = CheckpointManager(str(tmp_path))
+    like = _tree(0)
+    for s in (1, 2):
+        corrupt_checkpoint(ck.save(s, _tree(s)), seed=s)
+    assert ck.restore_latest(like) is None
+
+
+def test_manifest_checksum_tamper_detected(tmp_path):
+    """Integrity is two-sided: doctoring the manifest's stored checksum
+    (not the payload) must also fail validation."""
+    ck = CheckpointManager(str(tmp_path))
+    tree = _tree(0)
+    ck.save(5, tree)
+    mpath = os.path.join(ck._step_dir(5), "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    first = next(iter(manifest["checksums"]))
+    manifest["checksums"][first] ^= 0xDEAD
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(CheckpointCorruptionError, match=first):
+        ck.restore(5, tree)
+
+
+def test_resave_failure_preserves_previous_copy(tmp_path):
+    """Crash mid-re-save of an existing step: the first copy survives
+    (the new tree is staged in a temp dir and published by rename, never
+    written over the old step in place)."""
+    ck = CheckpointManager(str(tmp_path))
+    v1 = _tree(0)
+    ck.save(1, v1)
+
+    boom = {"w": np.zeros((8, 4), np.float32), "b": _Explodes()}
+    with pytest.raises(RuntimeError, match="mid-save crash"):
+        ck.save(1, boom)
+    _assert_tree_equal(ck.restore(1, v1), v1)       # old copy intact
+    # and no stray staging dirs leak into the directory listing
+    assert [d for d in os.listdir(tmp_path) if d.startswith(".tmp_")] == []
+
+
+class _Explodes:
+    """A leaf whose array conversion raises — simulates an allocation/IO
+    failure partway through writing a new checkpoint."""
+
+    def __array__(self, *a, **kw):
+        raise RuntimeError("mid-save crash")
+
+
+def test_resave_success_replaces_atomically(tmp_path):
+    ck = CheckpointManager(str(tmp_path))
+    ck.save(1, _tree(0))
+    v2 = _tree(9, scale=5.0)
+    ck.save(1, v2)
+    _assert_tree_equal(ck.restore(1, v2), v2)
+    assert ck.steps() == [1]
+    leftovers = [d for d in os.listdir(tmp_path) if d.startswith(".old_")]
+    assert leftovers == []
+
+
+def test_pre_checksum_checkpoints_still_restore(tmp_path):
+    """Back-compat: a manifest without a ``checksums`` key (the old
+    format) restores without validation instead of erroring."""
+    ck = CheckpointManager(str(tmp_path))
+    tree = _tree(0)
+    ck.save(1, tree)
+    mpath = os.path.join(ck._step_dir(1), "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["checksums"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    _assert_tree_equal(ck.restore(1, tree), tree)
+
+
+def test_generator_params_roundtrip_attach_parity(tmp_path, tiny_gan_cfg,
+                                                  small_dataset):
+    """The serving-tier contract end to end: G params saved to disk,
+    restored against live params as `like`, re-attached — exploration is
+    Selection-identical to the original params."""
+    cfg = tiny_gan_cfg(MODEL)
+    engine = GANDSE(MODEL, cfg,
+                    ExplorerConfig(prob_threshold=0.1, max_candidates=128))
+    ds = small_dataset(MODEL, n=256)
+    params = G.init_generator(jax.random.PRNGKey(11), cfg, MODEL.space)
+    engine.attach(ds, params)
+    tasks = generate_tasks(MODEL, 6, seed=4)
+    before = engine.explore_tasks(tasks, seed=3)
+
+    ck = CheckpointManager(str(tmp_path))
+    ck.save(100, params, extra={"model": MODEL.name})
+    assert ck.restore_extra(100)["model"] == MODEL.name
+    restored = ck.restore(100, params)
+    engine.attach(ds, restored)
+    after = engine.explore_tasks(tasks, seed=3)
+    for i, (ra, rb) in enumerate(zip(before, after)):
+        sa, sb = ra.selection, rb.selection
+        assert sa.n_candidates == sb.n_candidates, i
+        if sa.cfg_idx is not None:
+            np.testing.assert_array_equal(sa.cfg_idx, sb.cfg_idx)
+        assert sa.latency == sb.latency and sa.power == sb.power, i

@@ -1,0 +1,278 @@
+"""The concurrent serving front end (`repro.serve.frontend.ServeFrontend`).
+
+Contract under test: batching, threading, admission control, deadlines,
+retries, and fault injection are all invisible to correctness — every
+non-rejected response is Selection-identical to a standalone
+`explore_tasks` call — and every submitted request terminates in exactly
+one of DONE / FAILED / REJECTED, under healthy engines, slow engines,
+injected device-route faults (where the degraded host fallback must
+activate and then recover), and shutdown.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import gan as G
+from repro.core.dse_api import GANDSE
+from repro.core.explorer import ExplorerConfig
+from repro.dataset.generator import generate_tasks
+from repro.design_models.dnnweaver import DnnWeaverModel
+from repro.serve import (DSEServer, FaultPlan, FaultyEngine, FrontendConfig,
+                         ServeConfig, ServeFrontend)
+
+MODEL = DnnWeaverModel()
+
+
+@pytest.fixture(scope="module")
+def engine(tiny_gan_cfg, small_dataset):
+    """Random-init generator: serving correctness does not depend on
+    training quality (same rationale as test_serve)."""
+    cfg = tiny_gan_cfg(MODEL)
+    g = GANDSE(MODEL, cfg,
+               ExplorerConfig(prob_threshold=0.1, max_candidates=128))
+    ds = small_dataset(MODEL, n=256)
+    g.attach(ds, G.init_generator(jax.random.PRNGKey(3), cfg, MODEL.space))
+    return g
+
+
+class SlowEngine:
+    """Transparent wrapper that stalls every dispatch (host-side sleep) —
+    builds queue pressure for the admission/deadline tests."""
+
+    def __init__(self, inner, delay_s):
+        self._inner, self.delay_s = inner, delay_s
+        self.model = inner.model
+        self.method_name = inner.method_name
+
+    def explore_tasks(self, tasks, seed=0, batched=None):
+        time.sleep(self.delay_s)
+        return self._inner.explore_tasks(tasks, seed=seed, batched=batched)
+
+
+def _assert_selection_equal(tag, i, sa, sb):
+    assert sa.n_candidates == sb.n_candidates, (tag, i)
+    assert (sa.cfg_idx is None) == (sb.cfg_idx is None), (tag, i)
+    if sa.cfg_idx is not None:
+        np.testing.assert_array_equal(sa.cfg_idx, sb.cfg_idx,
+                                      err_msg=f"{tag}[{i}]")
+    assert sa.latency == sb.latency and sa.power == sb.power, (tag, i)
+    assert sa.satisfied == sb.satisfied, (tag, i)
+
+
+def _submit_tasks(fe, tasks, n, seed0=7, timeout_s=None):
+    futs = {}
+    for i in range(n):
+        fut = fe.submit(MODEL.name, tasks.net_idx[i], tasks.lat_obj[i],
+                        tasks.pow_obj[i], seed=seed0 + i,
+                        timeout_s=timeout_s)
+        futs[fut.rid] = (i, fut)
+    return futs
+
+
+def test_frontend_parity_with_direct_batch(engine):
+    """Threaded submit/form/dispatch pipeline == one direct explore_tasks
+    call, row by row; every future resolves DONE."""
+    tasks = generate_tasks(MODEL, 10, seed=2)
+    direct = engine.explore_tasks(tasks, seed=7)
+    srv = DSEServer(ServeConfig(max_batch=4))
+    srv.register(engine)
+    with ServeFrontend(srv) as fe:
+        futs = _submit_tasks(fe, tasks, 10)
+        for rid, (i, fut) in futs.items():
+            resp = fut.result(timeout=60)
+            assert resp.ok and resp.source in ("dispatch", "cache",
+                                               "coalesced")
+            _assert_selection_equal("parity", i, resp.result.selection,
+                                    direct[i].selection)
+    assert srv.batcher.pending() == 0
+
+
+def test_frontend_cache_and_coalesce(engine):
+    """Identical submissions dispatch once: the duplicate rides the queued
+    request (coalesced) or hits the LRU (cache) depending on timing —
+    either way the Selections agree and no extra row is dispatched."""
+    tasks = generate_tasks(MODEL, 3, seed=2)
+    srv = DSEServer(ServeConfig(max_batch=8))
+    srv.register(engine)
+    with ServeFrontend(srv) as fe:
+        first = _submit_tasks(fe, tasks, 3)
+        dup = [fe.submit(MODEL.name, tasks.net_idx[i], tasks.lat_obj[i],
+                         tasks.pow_obj[i], seed=7 + i) for i in range(3)]
+        by_row = {i: fut.result(60) for _, (i, fut) in first.items()}
+        for i, fut in enumerate(dup):
+            resp = fut.result(timeout=60)
+            assert resp.source in ("cache", "coalesced"), resp.source
+            _assert_selection_equal("dup", i, resp.result.selection,
+                                    by_row[i].result.selection)
+    assert srv.stats["dispatched_rows"] == 3        # duplicates rode along
+
+
+def test_frontend_admission_reject_sheds_load(engine):
+    """Queue-bound admission with the reject policy: a burst beyond
+    max_queue is shed at the door with retry-after hints; everything else
+    is served; nothing wedges."""
+    srv = DSEServer(ServeConfig(max_batch=1, max_queue=2,
+                                cache_capacity=0, retry_jitter=0.0))
+    srv.register(SlowEngine(engine, delay_s=0.05))
+    tasks = generate_tasks(MODEL, 12, seed=2)
+    with ServeFrontend(srv, FrontendConfig(admission="reject")) as fe:
+        futs = _submit_tasks(fe, tasks, 12)
+        resps = [fut.result(timeout=60) for _, fut in futs.values()]
+    rejected = [r for r in resps if r.rejected]
+    served = [r for r in resps if r.ok]
+    assert len(rejected) + len(served) == 12            # all terminated
+    assert rejected, "a 12-deep burst into a 2-deep queue must shed"
+    assert all(r.retry_after and r.retry_after > 0 for r in rejected)
+    assert all("queue full" in r.error for r in rejected)
+    assert srv.stats["rejected_queue"] == len(rejected)
+
+
+def test_frontend_admission_block_backpressures(engine):
+    """The block policy serves everything: a full queue stalls the
+    submitter until space frees instead of shedding."""
+    srv = DSEServer(ServeConfig(max_batch=2, max_queue=2, cache_capacity=0))
+    srv.register(SlowEngine(engine, delay_s=0.01))
+    tasks = generate_tasks(MODEL, 8, seed=2)
+    with ServeFrontend(srv, FrontendConfig(admission="block")) as fe:
+        futs = _submit_tasks(fe, tasks, 8)
+        resps = [fut.result(timeout=60) for _, fut in futs.values()]
+    assert all(r.ok for r in resps)
+    assert srv.stats["rejected"] == 0
+
+
+def test_frontend_deadline_sheds_expired(engine):
+    """Requests whose deadline passes while queued behind a slow dispatch
+    are shed before dispatch (REJECTED, deadline error).  Shedding is
+    best-effort by contract: a request *already formed* into the prepared
+    -batch window when its deadline passes is served late instead — at
+    most max_prepared+1 batches can be in flight past the former, so the
+    stragglers behind them must all shed."""
+    srv = DSEServer(ServeConfig(max_batch=1, cache_capacity=0))
+    srv.register(SlowEngine(engine, delay_s=0.3))
+    tasks = generate_tasks(MODEL, 8, seed=2)
+    with ServeFrontend(srv, FrontendConfig(max_prepared=1)) as fe:
+        # rid 0 occupies the dispatcher for ~0.3 s; the rest carry 50 ms
+        # deadlines and expire queued behind it (except the <=2 the former
+        # managed to pre-form before the deadline hit)
+        lead = fe.submit(MODEL.name, tasks.net_idx[0], tasks.lat_obj[0],
+                         tasks.pow_obj[0], seed=7)
+        time.sleep(0.05)            # let the lead batch reach the engine
+        late = [fe.submit(MODEL.name, tasks.net_idx[i], tasks.lat_obj[i],
+                          tasks.pow_obj[i], seed=7 + i, timeout_s=0.05)
+                for i in range(1, 8)]
+        assert lead.result(timeout=60).ok
+        resps = [fut.result(timeout=60) for fut in late]
+    rejected = [r for r in resps if r.rejected]
+    served = [r for r in resps if r.ok]
+    assert len(rejected) + len(served) == 7          # all terminated
+    # one batch in the prepared buffer + one formed-and-blocked at the put:
+    # everything behind them expires in the queue and must shed
+    assert len(served) <= 2 and len(rejected) >= 5
+    assert all("deadline" in r.error for r in rejected)
+    assert srv.stats["rejected_deadline"] == len(rejected)
+
+
+def test_frontend_degraded_fallback_activates_and_recovers(engine):
+    """A burst of device-route faults flips the model onto the sequential
+    host-oracle route (responses flagged degraded, Selections unchanged);
+    once the fault window passes, a recovery probe restores the device
+    route.  No request is lost or FAILED."""
+    plan = FaultPlan(burst_start=0, burst_len=3, device_route_only=True)
+    faulty = FaultyEngine(engine, plan)
+    srv = DSEServer(ServeConfig(
+        max_batch=2, cache_capacity=0, max_dispatch_attempts=10,
+        retry_backoff_base=0.005, retry_jitter=0.0,
+        degrade_after=2, degrade_probe_after=1))
+    srv.register(faulty)
+    tasks = generate_tasks(MODEL, 10, seed=2)
+    direct = engine.explore_tasks(tasks, seed=7)
+    with ServeFrontend(srv) as fe:
+        futs = _submit_tasks(fe, tasks, 10)
+        resps = {}
+        for rid, (i, fut) in futs.items():
+            resps[i] = fut.result(timeout=120)
+    assert all(r.ok for r in resps.values()), \
+        {i: (r.source, r.error) for i, r in resps.items() if not r.ok}
+    for i, r in resps.items():
+        _assert_selection_equal("faulty", i, r.result.selection,
+                                direct[i].selection)
+    assert faulty.injected_errors == 3
+    assert srv.stats["degraded_entered"] == 1
+    assert srv.stats["degraded_batches"] >= 1
+    assert srv.stats["degraded_recovered"] == 1
+    assert not srv.summary()["degraded"]              # healthy again
+    assert any(r.degraded for r in resps.values())
+    assert srv.stats["failed"] == 0
+
+
+def test_frontend_stop_without_drain_rejects_queued(engine):
+    """stop(drain=False) terminates every outstanding future: queued
+    requests get REJECTED shutdown responses instead of hanging."""
+    srv = DSEServer(ServeConfig(max_batch=1, cache_capacity=0))
+    srv.register(SlowEngine(engine, delay_s=0.2))
+    tasks = generate_tasks(MODEL, 6, seed=2)
+    fe = ServeFrontend(srv).start()
+    futs = _submit_tasks(fe, tasks, 6)
+    time.sleep(0.05)                 # let the pipeline pick up some work
+    fe.stop(drain=False)
+    states = [fut.result(timeout=60) for _, fut in futs.values()]
+    assert all(r.ok or r.rejected for r in states)
+    assert any(r.rejected and "shutting down" in r.error for r in states)
+    assert srv.batcher.pending() == 0
+
+
+def test_frontend_metrics_snapshot(engine):
+    srv = DSEServer(ServeConfig(max_batch=4))
+    srv.register(engine)
+    tasks = generate_tasks(MODEL, 4, seed=2)
+    with ServeFrontend(srv) as fe:
+        futs = _submit_tasks(fe, tasks, 4)
+        for _, fut in futs.values():
+            fut.result(timeout=60)
+        m = fe.metrics()
+    lat = m["frontend"]["latency"]
+    assert lat["n"] == 4 and lat["p99_ms"] >= lat["p50_ms"] > 0
+    assert m["frontend"]["inflight"] == 0
+    assert m["dispatch_attempts"] >= m["batches"] >= 1
+
+
+def test_frontend_concurrent_submitters(engine):
+    """Many submitter threads at once: the one-lock admission path keeps
+    rids unique and every future resolves with the right Selection."""
+    tasks = generate_tasks(MODEL, 16, seed=2)
+    direct = engine.explore_tasks(tasks, seed=7)
+    srv = DSEServer(ServeConfig(max_batch=8))
+    srv.register(engine)
+    results = {}
+    errors = []
+    lock = threading.Lock()
+
+    def submitter(rows):
+        try:
+            for i in rows:
+                fut = fe.submit(MODEL.name, tasks.net_idx[i],
+                                tasks.lat_obj[i], tasks.pow_obj[i],
+                                seed=7 + i)
+                resp = fut.result(timeout=120)
+                with lock:
+                    results[i] = resp
+        except Exception as e:      # pragma: no cover - surfaced below
+            errors.append(e)
+
+    with ServeFrontend(srv) as fe:
+        threads = [threading.Thread(target=submitter,
+                                    args=(range(k, 16, 4),))
+                   for k in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120)
+    assert not errors, errors
+    assert len(results) == 16
+    for i, resp in results.items():
+        assert resp.ok
+        _assert_selection_equal("mt", i, resp.result.selection,
+                                direct[i].selection)

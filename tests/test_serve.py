@@ -386,3 +386,147 @@ def test_hot_swap_refreshes_params_without_recompile(models, tiny_gan_cfg,
                        or not np.array_equal(sa.cfg_idx, sb.cfg_idx)
                        or sa.n_candidates != sb.n_candidates)
     assert changed > 0, "different params produced identical selections"
+
+
+# ---------------------------------------------------------------------------
+# robustness: backoff, admission control, deadlines, degraded fallback
+# ---------------------------------------------------------------------------
+def test_retry_backoff_window_blocks_then_allows(models, tiny_gan_cfg,
+                                                 small_dataset):
+    """A failed dispatch arms a jittered-exponential backoff window: step()
+    refuses to re-hammer the engine inside it (visible in summary()) and
+    dispatches normally once it expires; drain() sleeps it out."""
+    import time
+
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+
+    class FailsOnce:
+        def __init__(self, inner):
+            self._inner, self.model, self.calls = inner, inner.model, 0
+
+        def explore_tasks(self, tasks, seed=0):
+            self.calls += 1
+            if self.calls == 1:
+                raise RuntimeError("transient engine failure")
+            return self._inner.explore_tasks(tasks, seed=seed)
+
+    srv = DSEServer(ServeConfig(max_batch=8, retry_backoff_base=0.25,
+                                retry_jitter=0.0))
+    srv.register(FailsOnce(g))
+    tasks = generate_tasks(model, 2, seed=2)
+    rids = _submit_all(srv, model, tasks, 7, range(2))
+    with pytest.raises(RuntimeError, match="transient"):
+        srv.step()
+    # inside the window: work is pending but step() must not dispatch
+    assert srv.batcher.pending() == 2
+    assert srv.step() == 0
+    backoff = srv.summary()["backoff"]
+    assert model.name in backoff and 0 < backoff[model.name] <= 0.25
+    assert srv.summary()["inflight_attempts"] == {r: 1 for r in rids}
+    time.sleep(0.26)
+    assert srv.step() == 2                   # window expired: retry served
+    assert srv.stats["dispatch_attempts"] == 2
+    assert srv.stats["retried"] == 2
+    assert srv.summary()["backoff"] == {}    # cleared by the success
+
+
+def test_queue_bound_rejects_at_the_door(models, tiny_gan_cfg,
+                                         small_dataset):
+    """Admission control: submissions past ServeConfig.max_queue get an
+    immediate REJECTED response with a retry-after hint instead of
+    buffering without bound; admitted work is unaffected."""
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+    srv = DSEServer(ServeConfig(max_batch=8, max_queue=2, cache_capacity=0))
+    srv.register(g)
+    tasks = generate_tasks(model, 4, seed=2)
+    rid_to_row = _submit_all(srv, model, tasks, 7, range(4))
+    assert srv.batcher.pending() == 2        # only the first two admitted
+    shed = [srv.response(r) for r, i in rid_to_row.items() if i >= 2]
+    assert all(r is not None and r.rejected for r in shed)
+    assert all("queue full" in r.error for r in shed)
+    assert all(r.retry_after and 0 < r.retry_after <= 60 for r in shed)
+    assert srv.stats["rejected"] == srv.stats["rejected_queue"] == 2
+    direct = g.explore_tasks(tasks, seed=7)
+    served = {rid_to_row[r.rid]: r for r in srv.drain() if r.ok}
+    assert sorted(served) == [0, 1]
+    for i, r in served.items():
+        _assert_selection_equal("bounded", i, r.result.selection,
+                                direct[i].selection)
+
+
+def test_deadline_sheds_before_dispatch(models, tiny_gan_cfg,
+                                        small_dataset):
+    """Per-request deadlines: an already-expired submit is rejected at
+    admission; a queued request whose deadline passes is shed by the next
+    step() — REJECTED with a hint, never dispatched."""
+    import time
+
+    from repro.serve.server import _now
+
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+    srv = DSEServer(ServeConfig(max_batch=8, cache_capacity=0))
+    srv.register(g)
+    tasks = generate_tasks(model, 3, seed=2)
+    dead = srv.submit(model.name, tasks.net_idx[0], tasks.lat_obj[0],
+                      tasks.pow_obj[0], seed=7, deadline=_now() - 1.0)
+    resp = srv.response(dead)
+    assert resp.rejected and "at admission" in resp.error
+    soon = srv.submit(model.name, tasks.net_idx[1], tasks.lat_obj[1],
+                      tasks.pow_obj[1], seed=8, deadline=_now() + 0.02)
+    ok = srv.submit(model.name, tasks.net_idx[2], tasks.lat_obj[2],
+                    tasks.pow_obj[2], seed=9)
+    time.sleep(0.03)                         # `soon` expires while queued
+    dispatched = srv.stats["batches"]
+    responses = {r.rid: r for r in srv.drain()}
+    assert responses[soon].rejected
+    assert "before dispatch" in responses[soon].error
+    assert responses[ok].ok and responses[ok].source == "dispatch"
+    assert srv.stats["rejected_deadline"] == 2
+    assert srv.stats["dispatched_rows"] == 1   # the expired row never ran
+    assert srv.stats["batches"] == dispatched + 1
+
+
+def test_sync_degraded_fallback_and_recovery(models, tiny_gan_cfg,
+                                             small_dataset):
+    """Sync pump under a device-route fault burst: consecutive failures
+    flip the model onto the sequential host-oracle route (responses flag
+    degraded=True, Selections unchanged by the parity contract), and a
+    later probe restores the device route."""
+    from repro.serve import FaultPlan, FaultyEngine, InjectedFault
+
+    model = models["dnnweaver"]
+    g = _attached(model, tiny_gan_cfg, small_dataset)
+    faulty = FaultyEngine(g, FaultPlan(burst_start=0, burst_len=2,
+                                       device_route_only=True))
+    srv = DSEServer(ServeConfig(
+        max_batch=4, cache_capacity=0, max_dispatch_attempts=10,
+        retry_backoff_base=0.001, retry_jitter=0.0,
+        degrade_after=2, degrade_probe_after=1))
+    srv.register(faulty)
+    tasks = generate_tasks(model, 6, seed=2)
+    direct = g.explore_tasks(tasks, seed=7)
+    rid_to_row = _submit_all(srv, model, tasks, 7, range(6))
+    responses = {}
+    for _ in range(50):
+        try:
+            responses.update({r.rid: r for r in srv.drain()})
+        except InjectedFault:
+            continue
+        break
+    responses.update({r.rid: r for r in srv.drain()})
+    assert len(responses) == 6
+    assert all(r.ok for r in responses.values())
+    for rid, i in rid_to_row.items():
+        _assert_selection_equal("degraded", i,
+                                responses[rid].result.selection,
+                                direct[i].selection)
+    assert faulty.injected_errors == 2
+    assert srv.stats["degraded_entered"] == 1
+    assert srv.stats["degraded_batches"] >= 1
+    assert srv.stats["degraded_recovered"] == 1
+    assert srv.stats["failed"] == 0
+    assert any(r.degraded for r in responses.values())
+    assert not srv.summary()["degraded"]     # device route healed

@@ -1,0 +1,281 @@
+"""Thread-safety of the serving primitives: `MicroBatcher` and
+`ResultCache` under adversarial interleavings.
+
+These are engine-free tests (no JAX compute): barrier-started threads
+hammer admit/pop/requeue/shed and get/put/invalidate concurrently, and the
+assertions are conservation laws — every admitted rid leaves the batcher
+exactly once (popped XOR shed, never lost, never duplicated), per-thread
+FIFO order survives, and the cache's LRU bound, stat counters, and stored
+values stay consistent.  A property test (hypothesis, or the repo's
+seeded-random `_mini_hypothesis` fallback) varies thread/batch geometry.
+"""
+import threading
+from collections import Counter
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CI image — seeded-random fallback
+    from _mini_hypothesis import given, settings, strategies as st
+
+from repro.serve import DSERequest, MicroBatcher, ResultCache
+
+_NET = np.array([1, 2, 3], np.int64)
+
+
+def _req(rid, model="m0", seed=None, deadline=None):
+    return DSERequest(rid=rid, model_name=model, net_idx=_NET,
+                      lat_obj=1.0, pow_obj=2.0,
+                      seed=rid if seed is None else seed, deadline=deadline)
+
+
+def _run_threads(fns):
+    """Start one thread per fn behind a common barrier (maximally
+    simultaneous release) and join them all; re-raises the first error."""
+    barrier = threading.Barrier(len(fns))
+    errors = []
+
+    def wrap(fn):
+        def run():
+            barrier.wait()
+            try:
+                fn()
+            except BaseException as e:    # pragma: no cover - surfaced below
+                errors.append(e)
+        return run
+
+    threads = [threading.Thread(target=wrap(fn)) for fn in fns]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert not any(t.is_alive() for t in threads), "thread wedged"
+    if errors:
+        raise errors[0]
+    return errors
+
+
+def test_concurrent_admit_and_pop_conserves_requests():
+    """4 admitters racing 2 poppers: every rid crosses the batcher exactly
+    once, and each admitter's own rids come out in its submission order
+    (per-source FIFO is what the single queue lock must preserve)."""
+    n_threads, n_each = 4, 200
+    batcher = MicroBatcher(max_batch=7)
+    popped = []
+    pop_lock = threading.Lock()
+    total = n_threads * n_each
+
+    def admitter(k):
+        def run():
+            for i in range(n_each):
+                batcher.admit(_req(k * n_each + i))
+        return run
+
+    def popper():
+        def run():
+            while True:
+                with pop_lock:
+                    if len(popped) >= total:
+                        return
+                    b = batcher.next_batch()
+                    if b is not None:
+                        popped.extend(r.rid for r in b.requests)
+        return run
+
+    _run_threads([admitter(k) for k in range(n_threads)]
+                 + [popper(), popper()])
+    assert len(popped) == total and len(set(popped)) == total
+    assert batcher.pending() == 0
+    for k in range(n_threads):                  # per-admitter FIFO
+        mine = [r for r in popped if k * n_each <= r < (k + 1) * n_each]
+        assert mine == sorted(mine)
+
+
+def test_concurrent_requeue_front_loses_nothing():
+    """Dispatch-failure recovery under contention: poppers that requeue
+    every other batch (simulating failed dispatches) racing an admitter —
+    conservation still holds and nothing is double-delivered."""
+    batcher = MicroBatcher(max_batch=5)
+    n = 300
+    delivered = []
+    lock = threading.Lock()
+
+    def admitter():
+        for i in range(n):
+            batcher.admit(_req(i))
+
+    def flaky_popper():
+        fail_next = True
+        while True:
+            with lock:
+                if len(delivered) >= n:
+                    return
+                b = batcher.next_batch()
+                if b is None:
+                    continue
+                if fail_next:
+                    batcher.requeue_front(b.requests)   # "dispatch failed"
+                else:
+                    delivered.extend(r.rid for r in b.requests)
+                fail_next = not fail_next
+
+    _run_threads([admitter, flaky_popper, flaky_popper])
+    assert sorted(delivered) == list(range(n))
+    assert batcher.pending() == 0
+
+
+def test_concurrent_shed_admit_pop_partition():
+    """shed() racing admit/pop: every admitted rid ends up in exactly one
+    of {popped, shed, still-queued} — the load-shedding path can never
+    lose a request or deliver it twice."""
+    batcher = MicroBatcher(max_batch=4)
+    n = 400
+    popped, shed = [], []
+    lock = threading.Lock()
+    done = threading.Event()
+
+    def admitter():
+        for i in range(n):
+            # odd rids are shed-eligible (the predicate below)
+            batcher.admit(_req(i))
+        done.set()
+
+    def popper():
+        while not (done.is_set() and batcher.pending() == 0):
+            b = batcher.next_batch()
+            if b is not None:
+                with lock:
+                    popped.extend(r.rid for r in b.requests)
+
+    def shedder():
+        while not (done.is_set() and batcher.pending() == 0):
+            out = batcher.shed(lambda r: r.rid % 2 == 1)
+            with lock:
+                shed.extend(r.rid for r in out)
+
+    _run_threads([admitter, popper, shedder])
+    leftovers = []
+    while True:
+        b = batcher.next_batch()
+        if b is None:
+            break
+        leftovers.extend(r.rid for r in b.requests)
+    counts = Counter(popped) + Counter(shed) + Counter(leftovers)
+    assert counts == Counter(range(n))          # exactly-once partition
+    assert all(r % 2 == 1 for r in shed)        # predicate respected
+
+
+def test_concurrent_cache_put_get_invalidate():
+    """Writers, readers, and an invalidator hammering one ResultCache:
+    no lost updates visible as wrong values (a hit for key k always
+    returns the value put under k), the capacity bound holds throughout,
+    and the hit/miss counters exactly partition the reads."""
+    cache = ResultCache(capacity=32)
+    n_keys, n_rounds = 64, 150
+    values = {k: f"v{k}" for k in range(n_keys)}
+    reads = Counter()
+    lock = threading.Lock()
+
+    def writer(offset):
+        def run():
+            for i in range(n_rounds):
+                k = (i + offset) % n_keys
+                cache.put(("m", k), values[k])
+                assert len(cache) <= 32
+        return run
+
+    def reader():
+        hits = misses = 0
+        for i in range(n_rounds * 2):
+            k = i % n_keys
+            got = cache.get(("m", k))
+            if got is None:
+                misses += 1
+            else:
+                hits += 1
+                assert got == values[k]         # never a torn/foreign value
+        with lock:
+            reads["hits"] += hits
+            reads["misses"] += misses
+
+    def invalidator():
+        for _ in range(20):
+            cache.invalidate_model("other")     # no-op model: exercises scan
+        cache.invalidate_model("m")
+
+    _run_threads([writer(0), writer(17), reader, reader, invalidator])
+    s = cache.stats()
+    assert s["size"] <= s["capacity"] == 32
+    assert s["hits"] == reads["hits"] and s["misses"] == reads["misses"]
+    assert s["hits"] + s["misses"] == 2 * n_rounds * 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=16),
+       st.integers(min_value=1, max_value=60))
+def test_property_admit_pop_conservation(n_admitters, max_batch, n_each):
+    """Property: for any (thread count, batch size, load) geometry, the
+    batcher delivers each admitted request exactly once and drains to
+    empty."""
+    batcher = MicroBatcher(max_batch=max_batch)
+    total = n_admitters * n_each
+    popped = []
+    lock = threading.Lock()
+
+    def admitter(k):
+        def run():
+            for i in range(n_each):
+                batcher.admit(_req(k * n_each + i))
+        return run
+
+    def popper():
+        while True:
+            with lock:
+                if len(popped) >= total:
+                    return
+                b = batcher.next_batch()
+                if b is not None:
+                    popped.extend(r.rid for r in b.requests)
+
+    _run_threads([admitter(k) for k in range(n_admitters)] + [popper])
+    assert sorted(popped) == list(range(total))
+    assert batcher.pending() == 0
+
+
+def test_batch_formation_under_concurrency_is_well_formed():
+    """Micro-batches popped during a race are still internally consistent:
+    pow2-padded sizes, seeds aligned with requests, one model per batch."""
+    batcher = MicroBatcher(max_batch=6)
+    n = 120
+    batches = []
+    lock = threading.Lock()
+
+    def admitter(model):
+        def run():
+            for i in range(n):
+                batcher.admit(_req(i, model=model))
+        return run
+
+    def popper():
+        got = 0
+        while got < 2 * n:
+            b = batcher.next_batch()
+            if b is None:
+                with lock:
+                    got = sum(x.n_real for x in batches)
+                continue
+            with lock:
+                batches.append(b)
+                got = sum(x.n_real for x in batches)
+
+    _run_threads([admitter("a"), admitter("b"), popper])
+    assert sum(b.n_real for b in batches) == 2 * n
+    for b in batches:
+        assert b.padded_size >= b.n_real
+        assert (b.padded_size & (b.padded_size - 1)) == 0   # pow2 bucket
+        assert len(b.seeds) == b.padded_size
+        np.testing.assert_array_equal(
+            b.seeds[: b.n_real], [r.seed for r in b.requests])
+        assert len({r.model_name for r in b.requests}) == 1
