@@ -1,0 +1,417 @@
+"""repro-lint self-tests: every rule proven live by a failing fixture.
+
+Per rule: the bad fixture fires exactly once with the expected code, the
+good twin is silent, and inserting ``# lint: disable=<rule>`` above the
+reported line silences it.  Plus framework-level coverage: file/def-span
+suppressions, --select, JSON output, the exit-code contract, and parse
+errors surfacing as findings instead of crashes.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from tools.lint import lint_source, make_rules
+from tools.lint.__main__ import main as lint_main
+
+# code -> (path, bad source, good source); path matters for the
+# path-scoped rules (GL107 is strict only under serve//checkpoint/)
+FIXTURES = {
+    "GL101": ("mod.py", """
+        import jax
+
+        def f(key):
+            a = jax.random.normal(key)
+            b = jax.random.uniform(key)
+            return a + b
+        """, """
+        import jax
+
+        def f(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1)
+            b = jax.random.uniform(k2)
+            return a + b
+        """),
+    "GL102": ("mod.py", """
+        import jax
+
+        def f(seed):
+            return jax.random.PRNGKey(seed + 3)
+        """, """
+        import jax
+
+        def f(seed):
+            return jax.random.fold_in(jax.random.PRNGKey(seed), 3)
+        """),
+    "GL103": ("mod.py", """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.asarray(x) + 1
+        """, """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            return jnp.asarray(x) + 1
+        """),
+    "GL104": ("mod.py", """
+        from jax.sharding import PartitionSpec as P
+
+        SPEC = P("data", "rows")
+        """, """
+        from jax.sharding import PartitionSpec as P
+
+        SPEC = P(("pod", "data"), "model", None)
+        """),
+    "GL105": ("mod.py", """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step(state, x):
+            return state + x
+
+        def train(state, xs):
+            out = step(state, xs)
+            return out + state.mean()
+        """, """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step(state, x):
+            return state + x
+
+        def train(state, xs):
+            state = step(state, xs)
+            return state.mean()
+        """),
+    "GL106": ("mod.py", """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._items = []
+
+            def add(self, x):
+                with self._lock:
+                    self._items.append(x)
+
+            def size(self):
+                return len(self._items)
+        """, """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._items = []
+
+            def add(self, x):
+                with self._lock:
+                    self._items.append(x)
+
+            def size(self):
+                with self._lock:
+                    return len(self._items)
+        """),
+    "GL107": ("src/repro/serve/mod.py", """
+        def dispatch(g):
+            try:
+                return g()
+            except Exception:
+                return None
+        """, """
+        def dispatch(g):
+            try:
+                return g()
+            except Exception as e:
+                return {"error": repr(e)}
+        """),
+    "GL108": ("mod.py", """
+        from jax.experimental import pallas as pl
+
+        def run(kern, x):
+            b, d = x.shape
+            return pl.pallas_call(
+                kern,
+                in_specs=[pl.BlockSpec((8, d), lambda i: (0, 0))],
+            )(x)
+        """, """
+        from jax.experimental import pallas as pl
+
+        def run(kern, x):
+            bd = _pick(128, x.shape[1])
+            return pl.pallas_call(
+                kern,
+                in_specs=[pl.BlockSpec((8, bd), lambda i: (0, 0))],
+            )(x)
+        """),
+    "GL109": ("mod.py", """
+        import jax
+
+        def f(g, x):
+            return jax.jit(g)(x)
+        """, """
+        import functools
+        import jax
+
+        @functools.lru_cache(maxsize=None)
+        def make(g):
+            return jax.jit(g)
+
+        def f(g, x):
+            return make(g)(x)
+        """),
+    "GL110": ("mod.py", """
+        def violation(lat, pw, lo, po):
+            return max(lat - lo, 0.0) + max(pw - po, 0.0)
+        """, """
+        import numpy as np
+
+        def violation(lat, pw, lo, po):
+            if not (np.isfinite(lat) and np.isfinite(pw)):
+                return float("inf")
+            return max(lat - lo, 0.0) + max(pw - po, 0.0)
+        """),
+}
+
+RULE_NAMES = {r.code: r.name for r in make_rules()}
+
+
+def _lint(code, src, path):
+    return lint_source(textwrap.dedent(src), path=path)
+
+
+@pytest.mark.parametrize("code", sorted(FIXTURES))
+def test_bad_fixture_fires_exactly_once(code):
+    path, bad, _good = FIXTURES[code]
+    findings = _lint(code, bad, path)
+    assert len(findings) == 1, findings
+    assert findings[0].code == code
+    assert findings[0].rule == RULE_NAMES[code]
+
+
+@pytest.mark.parametrize("code", sorted(FIXTURES))
+def test_good_fixture_is_silent(code):
+    path, _bad, good = FIXTURES[code]
+    assert _lint(code, good, path) == []
+
+
+@pytest.mark.parametrize("code", sorted(FIXTURES))
+def test_line_suppression_silences(code):
+    path, bad, _good = FIXTURES[code]
+    src = textwrap.dedent(bad)
+    (finding,) = lint_source(src, path=path)
+    lines = src.splitlines()
+    lines.insert(finding.line - 1,
+                 f"# lint: disable={RULE_NAMES[code]}")
+    assert lint_source("\n".join(lines), path=path) == []
+
+
+@pytest.mark.parametrize("code", sorted(FIXTURES))
+def test_file_suppression_silences(code):
+    path, bad, _good = FIXTURES[code]
+    src = (f"# lint: disable-file={RULE_NAMES[code]}\n"
+           + textwrap.dedent(bad))
+    assert lint_source(src, path=path) == []
+
+
+# ---------------------------------------------------------------------------
+# extra rule-behavior cases beyond the canonical pairs
+# ---------------------------------------------------------------------------
+def test_prng_loop_reuse_fires():
+    src = textwrap.dedent("""
+        import jax
+
+        def f(key, n):
+            out = []
+            for i in range(n):
+                out.append(jax.random.normal(key))
+            return out
+        """)
+    (f,) = lint_source(src, path="mod.py")
+    assert f.code == "GL101" and "loop" in f.message
+
+
+def test_prng_fold_in_per_iteration_is_clean():
+    src = textwrap.dedent("""
+        import jax
+
+        def f(key, n):
+            out = []
+            for i in range(n):
+                k = jax.random.fold_in(key, i)
+                out.append(jax.random.normal(k))
+            return out
+        """)
+    assert lint_source(src, path="mod.py") == []
+
+
+def test_seed_mask_is_sanctioned():
+    src = textwrap.dedent("""
+        import jax
+
+        def f(seed, i):
+            return jax.random.PRNGKey((seed * 1000003 + i) & 0xFFFFFFFF)
+        """)
+    assert lint_source(src, path="mod.py") == []
+
+
+def test_host_sync_reachable_through_helper():
+    src = textwrap.dedent("""
+        import jax
+
+        def helper(x):
+            return x.item()
+
+        def outer(xs):
+            def body(c, x):
+                return c + helper(x), None
+            return jax.lax.scan(body, 0.0, xs)
+        """)
+    # helper is reached from the scanned body; body itself is nested (not
+    # module-visible) but helper is flagged via the jit-taker root scan
+    findings = lint_source(src, path="mod.py")
+    assert any(f.code == "GL103" and ".item()" in f.message
+               for f in findings)
+
+
+def test_host_sync_marker_sanctions():
+    src = textwrap.dedent("""
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            # deliberate host fallback  # lint: host-sync-ok
+            return np.asarray(x) + 1
+        """)
+    assert lint_source(src, path="mod.py") == []
+
+
+def test_pspec_empty_tuple_and_duplicate_axis():
+    src = textwrap.dedent("""
+        from jax.sharding import PartitionSpec
+
+        A = PartitionSpec((), "data")
+        B = PartitionSpec("data", "data")
+        """)
+    codes = [(f.code, f.line) for f in lint_source(src, path="mod.py")]
+    assert len(codes) == 2 and all(c == "GL104" for c, _ in codes)
+
+
+def test_aot_lower_compile_is_exempt():
+    src = textwrap.dedent("""
+        import jax
+
+        def compile_ahead(g, x):
+            return jax.jit(g).lower(x).compile()
+        """)
+    assert lint_source(src, path="mod.py") == []
+
+
+def test_bare_except_fires_everywhere():
+    src = textwrap.dedent("""
+        def f(g):
+            try:
+                return g()
+            except:
+                return None
+        """)
+    (f,) = lint_source(src, path="mod.py")
+    assert f.code == "GL107"
+
+
+def test_broad_unbound_except_ok_outside_strict_paths():
+    path, bad, _good = FIXTURES["GL107"]
+    assert lint_source(textwrap.dedent(bad), path="src/repro/launch/x.py") \
+        == []
+
+
+def test_reraise_cleanup_is_exempt_in_strict_paths():
+    src = textwrap.dedent("""
+        def save(tmp):
+            try:
+                publish(tmp)
+            except BaseException:
+                cleanup(tmp)
+                raise
+        """)
+    assert lint_source(src, path="src/repro/checkpoint/mod.py") == []
+
+
+def test_def_span_suppression():
+    path, bad, _good = FIXTURES["GL106"]
+    src = textwrap.dedent(bad).replace(
+        "    def size(self):",
+        "    # caller holds the lock by contract\n"
+        "    # lint: disable=lock-discipline\n"
+        "    def size(self):")
+    assert lint_source(src, path=path) == []
+
+
+# ---------------------------------------------------------------------------
+# framework: selection, output, exit codes
+# ---------------------------------------------------------------------------
+def test_select_filters_rules():
+    path, bad, _good = FIXTURES["GL101"]
+    assert _lint("GL101", bad, path) != []
+    assert lint_source(textwrap.dedent(bad), path=path,
+                       select=["GL104"]) == []
+    assert lint_source(textwrap.dedent(bad), path=path,
+                       select=["prng-key-reuse"]) != []
+
+
+def test_parse_error_is_a_finding():
+    (f,) = lint_source("def broken(:\n", path="mod.py")
+    assert f.code == "GL000" and f.rule == "parse-error"
+
+
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(FIXTURES["GL101"][1]))
+    good = tmp_path / "good.py"
+    good.write_text(textwrap.dedent(FIXTURES["GL101"][2]))
+
+    assert lint_main([str(good)]) == 0
+    assert lint_main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "GL101" in out and "prng-key-reuse" in out
+
+    assert lint_main(["--json", str(bad)]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["count"] == 1
+    assert payload["findings"][0]["code"] == "GL101"
+
+    assert lint_main([]) == 2                      # no paths
+    assert lint_main(["--select", "nope", str(good)]) == 2
+    assert lint_main(["--list-rules"]) == 0
+    assert len(capsys.readouterr().out.strip().splitlines()) \
+        == len(make_rules())
+
+
+def test_repo_is_clean_at_head():
+    """The gate CI enforces: src/ and benchmarks/ lint clean."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.lint", "src", "benchmarks"],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_typed_seams_pass_mypy():
+    """mypy.ini holds the public seams (dse_api, request, frontend) to
+    full annotations; skipped where mypy isn't installed (it is in CI)."""
+    pytest.importorskip("mypy")
+    proc = subprocess.run(
+        [sys.executable, "-m", "mypy", "--config-file", "mypy.ini"],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

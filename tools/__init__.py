@@ -1,0 +1,1 @@
+"""In-repo developer tooling (static analysis, CI guards)."""

@@ -1,0 +1,32 @@
+"""repro-lint: the repo's JAX/Pallas-aware static-analysis pass.
+
+Usage:  ``python -m tools.lint src/ benchmarks/``  (exit 0 clean,
+1 findings, 2 usage error).  Library entry points: `lint_source`,
+`lint_paths`.  The runtime complement lives in
+`tools.lint.recompile_guard` (XLA recompile counting) and is imported
+separately because it needs jax; this package does not.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from .core import (FileContext, Finding, Linter, Rule, render_human,
+                   render_json, walk_py)
+from .rules import ALL_RULES, make_rules
+
+__all__ = ["FileContext", "Finding", "Linter", "Rule", "ALL_RULES",
+           "make_rules", "lint_source", "lint_paths", "render_human",
+           "render_json", "walk_py"]
+
+
+def lint_source(source: str, path: str = "<string>",
+                select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint one source string (the test-suite entry point).  `path`
+    matters: some rules are path-scoped (GL107 is strict only in
+    serve/checkpoint paths)."""
+    return Linter(make_rules(select)).lint_source(source, path)
+
+
+def lint_paths(paths: Sequence[str],
+               select: Optional[Sequence[str]] = None) -> List[Finding]:
+    return Linter(make_rules(select)).lint_paths(paths)

@@ -1,0 +1,45 @@
+"""CLI: ``python -m tools.lint [--json] [--select RULE ...] PATH ...``"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from . import lint_paths, make_rules, render_human, render_json
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="tools.lint",
+        description="repro-lint: JAX/Pallas-aware static analysis for this "
+                    "repo (exit 0 clean, 1 findings, 2 usage error)")
+    parser.add_argument("paths", nargs="*", help="files or package dirs")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="machine-readable output")
+    parser.add_argument("--select", action="append", metavar="RULE",
+                        help="run only these rules (by name or GLnnn code); "
+                             "repeatable")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in make_rules():
+            print(f"{rule.code}  {rule.name:28s} {rule.description}")
+        return 0
+    if not args.paths:
+        parser.print_usage(sys.stderr)
+        print("tools.lint: error: no paths given", file=sys.stderr)
+        return 2
+    if args.select and not make_rules(args.select):
+        print(f"tools.lint: error: no rule matches {args.select}",
+              file=sys.stderr)
+        return 2
+
+    findings = lint_paths(args.paths, select=args.select)
+    print(render_json(findings) if args.as_json else render_human(findings))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,249 @@
+"""repro-lint core: the rule protocol, file walker, suppressions, output.
+
+The linter is a plain-AST analysis (no imports of the linted code, no jax
+dependency) so it runs anywhere Python runs and can never be broken by the
+code it checks.  Each `Rule` is a small visitor over one parsed file; the
+`Linter` walks files/packages, runs every enabled rule, applies
+suppressions, and renders findings as human lines or JSON.
+
+Suppressions (all take a comma-separated rule-name list, or ``all``):
+
+- ``# lint: disable=RULE`` on the flagged line — or on a comment-only line
+  directly above it — suppresses that line's findings;
+- the same comment on a ``def``/``class`` line suppresses the rule for the
+  entire function/class body (use for a documented invariant the rule
+  cannot see, e.g. "only ever called under the caller's lock");
+- ``# lint: disable-file=RULE`` anywhere in a file suppresses the rule for
+  the whole file.
+
+Exit-code contract (``python -m tools.lint``): 0 = clean, 1 = findings,
+2 = usage/internal error.  A file that fails to parse is itself a finding
+(``GL000 parse-error``), not a crash.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+_SUPPRESS_LINE = re.compile(r"#\s*lint:\s*disable=([A-Za-z0-9_\-, ]+)")
+_SUPPRESS_FILE = re.compile(r"#\s*lint:\s*disable-file=([A-Za-z0-9_\-, ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str        # rule name, e.g. "prng-key-reuse"
+    code: str        # stable id, e.g. "GL101"
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.code} [{self.rule}] {self.message}")
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @property
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.code)
+
+
+class Rule:
+    """Base class for one lint rule.
+
+    Subclasses set ``name`` (kebab-case, what suppressions reference),
+    ``code`` (stable GLnnn id), ``description`` (one line, shown by
+    ``--list-rules``), and implement ``check(ctx) -> Iterator[Finding]``.
+    """
+
+    name: str = "abstract-rule"
+    code: str = "GL000"
+    description: str = ""
+
+    def check(self, ctx: "FileContext") -> Iterator[Finding]:
+        raise NotImplementedError
+        yield  # pragma: no cover
+
+    def finding(self, ctx: "FileContext", node: ast.AST,
+                message: str) -> Finding:
+        return Finding(self.name, self.code, ctx.path,
+                       getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), message)
+
+
+class FileContext:
+    """One parsed file plus the shared per-file analyses rules lean on:
+    import-alias resolution, AST parent links, and the suppression map."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.aliases = _import_aliases(self.tree)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        self._line_suppress: Dict[int, Set[str]] = {}
+        self._file_suppress: Set[str] = set()
+        self._scan_suppressions()
+        # def/class-line suppressions extend over the whole body
+        self._span_suppress: List = []   # (first, last, names)
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                names = self._line_suppress.get(node.lineno)
+                if names:
+                    last = max((n.lineno for n in ast.walk(node)
+                                if hasattr(n, "lineno")), default=node.lineno)
+                    self._span_suppress.append((node.lineno, last, names))
+
+    def _scan_suppressions(self) -> None:
+        for i, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_FILE.search(text)
+            if m:
+                self._file_suppress |= _split_names(m.group(1))
+                continue
+            m = _SUPPRESS_LINE.search(text)
+            if not m:
+                continue
+            names = _split_names(m.group(1))
+            self._line_suppress.setdefault(i, set()).update(names)
+            # a comment-only line covers the next source line
+            if text.lstrip().startswith("#"):
+                self._line_suppress.setdefault(i + 1, set()).update(names)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        if {"all", rule} & self._file_suppress:
+            return True
+        names = self._line_suppress.get(line, ())
+        if "all" in names or rule in names:
+            return True
+        for first, last, span_names in self._span_suppress:
+            if first <= line <= last and {"all", rule} & span_names:
+                return True
+        return False
+
+    # ---- shared helpers ----------------------------------------------------
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted name of a Name/Attribute chain with import aliases
+        resolved: with ``import jax.numpy as jnp``, ``jnp.dot`` ->
+        ``jax.numpy.dot``.  None for non-name expressions."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(node.id)
+        parts.reverse()
+        root = self.aliases.get(parts[0], parts[0])
+        return ".".join([root] + parts[1:])
+
+    def call_name(self, call: ast.Call) -> Optional[str]:
+        return self.resolve(call.func)
+
+    def functions(self) -> Iterator[ast.FunctionDef]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node
+
+    def line_has_marker(self, line: int, marker: str) -> bool:
+        """True when `marker` appears in a comment on `line` or on the
+        comment-only line directly above it."""
+        for ln in (line, line - 1):
+            if 1 <= ln <= len(self.lines) and marker in self.lines[ln - 1]:
+                return True
+        return False
+
+
+def _split_names(raw: str) -> Set[str]:
+    return {p.strip() for p in raw.split(",") if p.strip()}
+
+
+def _import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """local name -> dotted module it stands for."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+class Linter:
+    """Run a rule set over files/trees and collect findings."""
+
+    def __init__(self, rules: Sequence[Rule]):
+        self.rules = list(rules)
+
+    def lint_source(self, source: str, path: str = "<string>") -> List[Finding]:
+        try:
+            ctx = FileContext(path, source)
+        except SyntaxError as e:
+            return [Finding("parse-error", "GL000", path, e.lineno or 1,
+                            e.offset or 0, f"file does not parse: {e.msg}")]
+        out: List[Finding] = []
+        for rule in self.rules:
+            for f in rule.check(ctx):
+                if not ctx.suppressed(f.rule, f.line):
+                    out.append(f)
+        return sorted(out, key=lambda f: f.sort_key)
+
+    def lint_file(self, path: str) -> List[Finding]:
+        try:
+            with open(path, encoding="utf-8") as fh:
+                source = fh.read()
+        except OSError as e:
+            return [Finding("parse-error", "GL000", path, 1, 0,
+                            f"unreadable file: {e}")]
+        return self.lint_source(source, path)
+
+    def lint_paths(self, paths: Iterable[str]) -> List[Finding]:
+        out: List[Finding] = []
+        for p in paths:
+            for f in sorted(walk_py(p)):
+                out.extend(self.lint_file(f))
+        return sorted(out, key=lambda f: f.sort_key)
+
+
+def walk_py(path: str) -> Iterator[str]:
+    """Yield .py files under `path` (a file or a package/directory),
+    skipping hidden and cache directories."""
+    if os.path.isfile(path):
+        if path.endswith(".py"):
+            yield path
+        return
+    for root, dirs, files in os.walk(path):
+        dirs[:] = [d for d in dirs
+                   if not d.startswith(".") and d != "__pycache__"]
+        for name in sorted(files):
+            if name.endswith(".py"):
+                yield os.path.join(root, name)
+
+
+def render_human(findings: Sequence[Finding]) -> str:
+    lines = [f.format() for f in findings]
+    n = len(findings)
+    lines.append(f"{n} finding{'s' if n != 1 else ''}")
+    return "\n".join(lines)
+
+
+def render_json(findings: Sequence[Finding]) -> str:
+    return json.dumps({"findings": [f.as_dict() for f in findings],
+                       "count": len(findings)}, indent=2)

@@ -1,0 +1,37 @@
+"""The repro-lint rule catalog.  Each rule encodes one bug class a past
+PR fixed by hand (see CONTRIBUTING.md for the provenance table)."""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from ..core import Rule
+from .prng import PrngKeyReuse, SeedInt32Overflow
+from .jit_purity import HostSyncInJit, JitPerCall
+from .sharding_axes import PSpecUnknownAxis
+from .donation import DonatedAfterUse
+from .locks import LockDiscipline
+from .excepts import OverbroadExcept
+from .pallas_blocks import PallasBlockSpec
+from .nan_guard import NanTransparentViolation
+
+ALL_RULES = [
+    PrngKeyReuse,              # GL101
+    SeedInt32Overflow,         # GL102
+    HostSyncInJit,             # GL103
+    PSpecUnknownAxis,          # GL104
+    DonatedAfterUse,           # GL105
+    LockDiscipline,            # GL106
+    OverbroadExcept,           # GL107
+    PallasBlockSpec,           # GL108
+    JitPerCall,                # GL109
+    NanTransparentViolation,   # GL110
+]
+
+
+def make_rules(select: Optional[Sequence[str]] = None) -> List[Rule]:
+    """Instantiate the rule set; `select` filters by rule name or code."""
+    rules = [cls() for cls in ALL_RULES]
+    if select:
+        wanted = set(select)
+        rules = [r for r in rules if r.name in wanted or r.code in wanted]
+    return rules

@@ -1,0 +1,124 @@
+"""GL105 donated-after-use: a buffer passed at a ``donate_argnums``
+position is deleted by XLA the moment the donating call runs — any later
+read of that Python name sees a dead array and raises (or, under some
+backends, silently aliases garbage).  The safe idiom is same-statement
+rebinding: ``carry, metrics = epoch(carry, ...)`` (core/train.py).
+Flags reads of a donated Name after the donating call and before the name
+is rebound.  Only constant ``donate_argnums`` are analyzed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..core import FileContext, Finding, Rule
+
+
+def _const_argnums(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in v.elts):
+            return tuple(e.value for e in v.elts)
+        return None     # dynamic donate_argnums: skip
+    return None
+
+
+class DonatedAfterUse(Rule):
+    name = "donated-after-use"
+    code = "GL105"
+    description = ("buffer read after being donated to a jit call "
+                   "(donate_argnums) without rebinding")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        donors = self._donating_callables(ctx)
+        if not donors:
+            return
+        for fn in ctx.functions():
+            yield from self._check_scope(ctx, fn, donors)
+
+    def _donating_callables(self, ctx: FileContext) -> Dict[str, Tuple[int, ...]]:
+        """name -> donated positions, for `f = jax.jit(g, donate_argnums=...)`
+        bindings and defs decorated with partial(jax.jit, donate_argnums=...)."""
+        out: Dict[str, Tuple[int, ...]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    ctx.call_name(node.value) in ("jax.jit", "jax.pmap"):
+                nums = _const_argnums(node.value)
+                if nums:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            out[t.id] = nums
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) and \
+                            ctx.call_name(dec) in ("functools.partial",
+                                                   "partial") and \
+                            dec.args and \
+                            ctx.resolve(dec.args[0]) in ("jax.jit",
+                                                         "jax.pmap"):
+                        nums = _const_argnums(dec)
+                        if nums:
+                            out[node.name] = nums
+        return out
+
+    def _check_scope(self, ctx: FileContext, fn,
+                     donors: Dict[str, Tuple[int, ...]]) -> Iterator[Finding]:
+        # (lineno, col, kind, name, node); kinds: donate < bind < read on ties
+        events: List[Tuple[int, int, int, str, ast.AST]] = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in donors:
+                stmt_targets = self._enclosing_targets(ctx, node)
+                for pos in donors[node.func.id]:
+                    if pos < len(node.args) and \
+                            isinstance(node.args[pos], ast.Name):
+                        donated = node.args[pos].id
+                        if donated in stmt_targets:
+                            continue    # same-statement rebind: safe
+                        # anchor at the call's last line so the call's own
+                        # argument Names never read as use-after-donate
+                        end = getattr(node, "end_lineno", None) or node.lineno
+                        events.append((end, node.col_offset, 0,
+                                       donated, node))
+            elif isinstance(node, ast.Name):
+                kind = 1 if isinstance(node.ctx, ast.Store) else 2
+                events.append((node.lineno, node.col_offset, kind,
+                               node.id, node))
+        events.sort(key=lambda e: (e[0], e[2]))
+
+        dead: Dict[str, int] = {}     # name -> donation lineno
+        for lineno, _col, kind, name, node in events:
+            if kind == 0:
+                dead[name] = lineno
+            elif kind == 1:
+                dead.pop(name, None)
+            elif name in dead and lineno > dead[name]:
+                yield self.finding(
+                    ctx, node,
+                    f"'{name}' was donated at line {dead[name]} and its "
+                    f"buffer is gone; rebind it from the call's result "
+                    f"(`x, ... = f(x, ...)`) before reading it again")
+                dead.pop(name)      # one finding per donation
+
+    def _enclosing_targets(self, ctx: FileContext, call: ast.Call) -> Set[str]:
+        node: ast.AST = call
+        while node in ctx.parents:
+            node = ctx.parents[node]
+            if isinstance(node, ast.Assign):
+                out: Set[str] = set()
+                for t in node.targets:
+                    for sub in ast.walk(t):
+                        if isinstance(sub, ast.Name):
+                            out.add(sub.id)
+                return out
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+        return set()

@@ -1,0 +1,67 @@
+"""GL107 overbroad-except: exception hygiene, strictest where it matters.
+
+Everywhere: bare ``except:`` and ``except Exception: pass``-style silent
+swallows are flagged — they eat KeyboardInterrupt/corruption signals or
+hide the first failure of a cascade.
+
+In the *dispatch and checkpoint paths* (any file under ``serve/`` or
+``checkpoint/``, or named ``*dispatch*``): ``except Exception`` must
+either bind the exception (so it can be recorded in the response/stats —
+the serving tier's fault-isolation contract) or re-raise after cleanup.
+An unbound, non-reraising broad handler there turns a real fault into a
+silent wrong answer.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from ..core import FileContext, Finding, Rule
+
+_STRICT_PATH = re.compile(r"(/|^)(serve|checkpoint)(/|$)|dispatch")
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(node: ast.ExceptHandler) -> bool:
+    return isinstance(node.type, ast.Name) and node.type.id in _BROAD
+
+
+def _reraises(node: ast.ExceptHandler) -> bool:
+    return any(isinstance(n, ast.Raise) for n in ast.walk(node))
+
+
+def _swallows_silently(node: ast.ExceptHandler) -> bool:
+    return all(isinstance(n, (ast.Pass, ast.Continue)) for n in node.body)
+
+
+class OverbroadExcept(Rule):
+    name = "overbroad-except"
+    code = "GL107"
+    description = ("bare except, silent broad swallow, or (in serve/"
+                   "checkpoint paths) except Exception that neither binds "
+                   "nor re-raises")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        strict = bool(_STRICT_PATH.search(ctx.path))
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield self.finding(
+                    ctx, node,
+                    "bare 'except:' also catches KeyboardInterrupt/"
+                    "SystemExit; catch Exception at most, and bind it")
+            elif _is_broad(node) and _swallows_silently(node):
+                yield self.finding(
+                    ctx, node,
+                    f"'except {node.type.id}: pass' swallows every failure "
+                    f"silently; bind it and record/log, or narrow the type")
+            elif strict and _is_broad(node) and node.name is None \
+                    and not _reraises(node):
+                yield self.finding(
+                    ctx, node,
+                    f"broad 'except {node.type.id}:' in a dispatch/"
+                    f"checkpoint path neither binds the error nor "
+                    f"re-raises; bind it ('as e') and record it so the "
+                    f"fault surfaces in responses/stats")

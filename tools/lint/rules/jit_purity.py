@@ -1,0 +1,192 @@
+"""Traced-code purity rules.
+
+GL103 host-sync-in-jit: host synchronization inside code reachable from a
+jit/scan/vmap root — ``.item()``, numpy-module calls on traced values,
+``float()/int()/bool()`` of non-constants, ``pure_callback``/``io_callback``
+— either fails tracing outright or silently forces a device round-trip per
+step.  Sanctioned escapes carry a ``# lint: host-sync-ok`` marker (e.g. the
+oracle's deliberate pure_callback fallback).
+
+GL109 jit-per-call: ``jax.jit(f)`` constructed and invoked inside the same
+(non-cached) function scope builds a fresh compilation cache entry per
+call — the retrace-churn bug the ``lru_cache``d factory pattern in
+core/explorer.py exists to avoid.  AOT chains (``jax.jit(f).lower(...)``)
+are exempt.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+from ..core import FileContext, Finding, Rule
+
+HOST_SYNC_MARKER = "lint: host-sync-ok"
+
+_JIT_DECORATORS = {"jax.jit", "jax.vmap", "jax.pmap"}
+_JIT_TAKERS = {"jax.jit", "jax.vmap", "jax.pmap", "jax.grad",
+               "jax.value_and_grad", "jax.checkpoint", "jax.remat",
+               "jax.lax.scan", "jax.lax.while_loop", "jax.lax.cond",
+               "jax.lax.fori_loop", "jax.lax.map",
+               "jax.experimental.pallas.pallas_call"}
+_CALLBACKS = {"jax.pure_callback", "jax.experimental.io_callback",
+              "jax.experimental.host_callback.call"}
+
+
+def _decorator_name(ctx: FileContext, dec: ast.AST) -> Optional[str]:
+    """Resolve a decorator, looking through functools.partial(...)."""
+    if isinstance(dec, ast.Call):
+        name = ctx.call_name(dec)
+        if name in ("functools.partial", "partial") and dec.args:
+            return ctx.resolve(dec.args[0])
+        return name
+    return ctx.resolve(dec)
+
+
+def _own_body(fn) -> Iterator[ast.AST]:
+    """Nodes of `fn`'s body excluding nested function/class scopes."""
+    stack: List[ast.AST] = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda, ast.ClassDef)):
+                continue
+            stack.append(child)
+
+
+class HostSyncInJit(Rule):
+    name = "host-sync-in-jit"
+    code = "GL103"
+    description = ("host sync (.item()/numpy call/float()/pure_callback) "
+                   "reachable from a jit/scan/vmap root without the "
+                   "'# lint: host-sync-ok' marker")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        defs: Dict[str, ast.AST] = {}
+        for fn in ctx.functions():
+            defs.setdefault(fn.name, fn)
+
+        roots: Set[str] = set()
+        for fn in ctx.functions():
+            for dec in fn.decorator_list:
+                if _decorator_name(ctx, dec) in _JIT_DECORATORS:
+                    roots.add(fn.name)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and \
+                    ctx.call_name(node) in _JIT_TAKERS:
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    if isinstance(arg, ast.Name) and arg.id in defs:
+                        roots.add(arg.id)
+
+        # intra-module reachability over simple-name calls
+        reachable = set(roots)
+        frontier = list(roots)
+        while frontier:
+            fn = defs.get(frontier.pop())
+            if fn is None:
+                continue
+            for node in _own_body(fn):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Name) and \
+                        node.func.id in defs and node.func.id not in reachable:
+                    reachable.add(node.func.id)
+                    frontier.append(node.func.id)
+
+        for name in sorted(reachable):
+            fn = defs[name]
+            static_params = {
+                a.arg for a in list(fn.args.args) + list(fn.args.kwonlyargs)
+                if isinstance(a.annotation, ast.Name)
+                and a.annotation.id in ("int", "float", "bool")
+            } if hasattr(fn, "args") else set()
+            for node in _own_body(fn):
+                msg = self._host_sync(ctx, node, static_params)
+                if msg and not ctx.line_has_marker(node.lineno,
+                                                  HOST_SYNC_MARKER):
+                    yield self.finding(
+                        ctx, node,
+                        f"{msg} inside jit-reachable '{name}'; hoist to the "
+                        f"host or mark the sanctioned fallback with "
+                        f"'# {HOST_SYNC_MARKER}'")
+
+    def _host_sync(self, ctx: FileContext, node: ast.AST,
+                   static_params: Set[str] = frozenset()) -> Optional[str]:
+        if not isinstance(node, ast.Call):
+            return None
+        name = ctx.call_name(node)
+        if name in _CALLBACKS:
+            return f"{name.rsplit('.', 1)[1]}() host escape"
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+                and not node.args:
+            return ".item() device sync"
+        if name and name.startswith("numpy.") and any(
+                not isinstance(a, ast.Constant) for a in node.args):
+            return f"numpy call {name}"
+        if name in ("float", "int", "bool") and node.args and \
+                self._non_static(node.args[0], static_params):
+            return f"{name}() of a traced value"
+        return None
+
+    @staticmethod
+    def _non_static(arg: ast.AST,
+                    static_params: Set[str] = frozenset()) -> bool:
+        if isinstance(arg, ast.Constant):
+            return False
+        # an int/float/bool-annotated parameter is a static Python scalar
+        # by signature (shape dims fed to block pickers, etc.)
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Name) and sub.id in static_params:
+                return False
+        for sub in ast.walk(arg):
+            # shape/dtype/len() are static under trace — not a sync
+            if isinstance(sub, ast.Attribute) and sub.attr in ("shape",
+                                                               "ndim",
+                                                               "size",
+                                                               "dtype"):
+                return False
+            if isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Name) and sub.func.id == "len":
+                return False
+        return True
+
+
+class JitPerCall(Rule):
+    name = "jit-per-call"
+    code = "GL109"
+    description = ("jax.jit(...) built and invoked inside the same "
+                   "non-lru_cached function retraces on every call")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn in ctx.functions():
+            if any(_decorator_name(ctx, d) in
+                   ("functools.lru_cache", "functools.cache", "lru_cache",
+                    "cache") for d in fn.decorator_list):
+                continue
+            yield from self._check_scope(ctx, fn)
+
+    def _check_scope(self, ctx: FileContext, fn) -> Iterator[Finding]:
+        jit_names: Set[str] = set()
+        for node in _own_body(fn):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    ctx.call_name(node.value) in ("jax.jit", "jax.pmap"):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        jit_names.add(t.id)
+            if not isinstance(node, ast.Call):
+                continue
+            # direct jax.jit(f)(args) — exempt AOT .lower()/.compile()
+            if isinstance(node.func, ast.Call) and \
+                    ctx.call_name(node.func) in ("jax.jit", "jax.pmap"):
+                yield self.finding(
+                    ctx, node,
+                    "jax.jit(...) invoked where it is built: every call "
+                    "retraces; hoist behind an lru_cache'd factory or to "
+                    "module scope")
+            if isinstance(node.func, ast.Name) and node.func.id in jit_names:
+                yield self.finding(
+                    ctx, node,
+                    f"'{node.func.id}' is a jax.jit result built in this "
+                    f"same call; hoist the jit behind an lru_cache'd "
+                    f"factory so the cache survives across calls")

@@ -1,0 +1,137 @@
+"""GL106 lock-discipline: within a class that owns a ``threading.Lock`` /
+``RLock`` / ``Condition`` attribute, any ``self.<attr>`` that is *mutated*
+under ``with self._lock`` in some method is lock-guarded state — touching
+it lock-free in another method is a data race (the invariant PR 7's
+split-dispatch API exists to keep).  A ``Condition(self._lock)`` shares
+the lock, so ``with self._space:`` also counts as holding it.
+
+``__init__`` is exempt (no concurrent access before construction
+completes).  Methods that are only ever called with the lock already held
+document that contract with a def-line ``# lint: disable=lock-discipline``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..core import FileContext, Finding, Rule
+
+_LOCK_CTORS = {"threading.Lock", "threading.RLock", "threading.Condition"}
+#: self.<attr>.<method>() calls that mutate the attribute in place
+_MUTATORS = {"append", "extend", "insert", "remove", "pop", "popleft",
+             "popitem", "clear", "update", "setdefault", "add", "discard",
+             "appendleft", "move_to_end", "put"}
+
+
+class LockDiscipline(Rule):
+    name = "lock-discipline"
+    code = "GL106"
+    description = ("attribute mutated under self._lock in one method but "
+                   "touched lock-free in another")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(ctx, node)
+
+    def _check_class(self, ctx: FileContext, cls: ast.ClassDef
+                     ) -> Iterator[Finding]:
+        locks = self._lock_attrs(ctx, cls)
+        if not locks:
+            return
+        methods = [n for n in cls.body
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+        guarded: Set[str] = set()
+        for m in methods:
+            if m.name == "__init__":
+                continue
+            for node, held in self._walk_with_lock(m, locks):
+                if held:
+                    attr = self._self_attr_mutation(node)
+                    if attr and attr not in locks:
+                        guarded.add(attr)
+        if not guarded:
+            return
+
+        for m in methods:
+            if m.name == "__init__":
+                continue
+            reported: Set[Tuple[str, int]] = set()
+            for node, held in self._walk_with_lock(m, locks):
+                if held or not isinstance(node, ast.Attribute):
+                    continue
+                if isinstance(node.value, ast.Name) and \
+                        node.value.id == "self" and node.attr in guarded:
+                    key = (node.attr, node.lineno)
+                    if key in reported:
+                        continue
+                    reported.add(key)
+                    yield self.finding(
+                        ctx, node,
+                        f"'self.{node.attr}' is mutated under the lock "
+                        f"elsewhere in {cls.name} but touched here without "
+                        f"holding it; wrap in `with self.{min(locks)}:` (or "
+                        f"suppress on the def line if the caller holds it)")
+
+    def _lock_attrs(self, ctx: FileContext, cls: ast.ClassDef) -> Set[str]:
+        locks: Set[str] = set()
+        # two passes so Condition(self._lock) resolves regardless of order
+        for _ in range(2):
+            for node in ast.walk(cls):
+                if not (isinstance(node, ast.Assign)
+                        and isinstance(node.value, ast.Call)):
+                    continue
+                name = ctx.call_name(node.value)
+                if name not in _LOCK_CTORS and name not in (
+                        "Lock", "RLock", "Condition"):
+                    continue
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id == "self":
+                        locks.add(t.attr)
+        return locks
+
+    def _walk_with_lock(self, fn, locks: Set[str]
+                        ) -> Iterator[Tuple[ast.AST, bool]]:
+        """Yield (node, lock_held) over fn's body, excluding nested scopes."""
+
+        def visit(node: ast.AST, held: bool) -> Iterator[Tuple[ast.AST, bool]]:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Lambda, ast.ClassDef)):
+                    continue
+                child_held = held
+                if isinstance(child, ast.With):
+                    for item in child.items:
+                        e = item.context_expr
+                        if isinstance(e, ast.Attribute) and \
+                                isinstance(e.value, ast.Name) and \
+                                e.value.id == "self" and e.attr in locks:
+                            child_held = True
+                yield child, child_held
+                yield from visit(child, child_held)
+
+        yield from visit(fn, False)
+
+    def _self_attr_mutation(self, node: ast.AST) -> Optional[str]:
+        """Name of the self attribute this node mutates, if any."""
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.ctx, (ast.Store, ast.Del)) and \
+                isinstance(node.value, ast.Name) and node.value.id == "self":
+            return node.attr
+        if isinstance(node, ast.Subscript):
+            v = node.value
+            if isinstance(node.ctx, (ast.Store, ast.Del)) and \
+                    isinstance(v, ast.Attribute) and \
+                    isinstance(v.value, ast.Name) and v.value.id == "self":
+                return v.attr
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _MUTATORS:
+            v = node.func.value
+            if isinstance(v, ast.Attribute) and \
+                    isinstance(v.value, ast.Name) and v.value.id == "self":
+                return v.attr
+        return None

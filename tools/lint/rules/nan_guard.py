@@ -1,0 +1,51 @@
+"""GL110 nan-transparent-violation: the PR-3 scoring bug class.  A cost
+model can emit NaN (log of a non-positive intermediate, division by a
+zero bandwidth); NaN compares false against every threshold, so a
+violation/satisfaction function without an explicit finiteness guard
+scores an invalid design as *feasible* and the DSE happily selects it.
+Any function whose name says it judges violation/satisfaction/feasibility
+and that computes a comparison or margin must reference ``isfinite`` /
+``isnan`` / ``nan_to_num`` somewhere in its body (see
+``core/selector.py:is_satisfied`` — "non-finite metrics never satisfy").
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from ..core import FileContext, Finding, Rule
+
+_JUDGE_NAME = re.compile(r"viol|satisf|feasib", re.IGNORECASE)
+_GUARD_NAME = re.compile(r"isfinite|isnan|isinf|nan_to_num|notnan",
+                         re.IGNORECASE)
+
+
+class NanTransparentViolation(Rule):
+    name = "nan-transparent-violation"
+    code = "GL110"
+    description = ("violation/satisfaction scoring without an isfinite/"
+                   "isnan guard treats NaN metrics as feasible")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn in ctx.functions():
+            if not _JUDGE_NAME.search(fn.name):
+                continue
+            scores, guarded = False, False
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Compare) or (
+                        isinstance(node, ast.BinOp)
+                        and isinstance(node.op, ast.Sub)):
+                    scores = True
+                if isinstance(node, (ast.Name, ast.Attribute)):
+                    ident = (node.id if isinstance(node, ast.Name)
+                             else node.attr)
+                    if _GUARD_NAME.search(ident):
+                        guarded = True
+            if scores and not guarded:
+                yield self.finding(
+                    ctx, fn,
+                    f"'{fn.name}' judges feasibility but never checks "
+                    f"isfinite/isnan: NaN metrics compare false against "
+                    f"every threshold and score as satisfied; guard like "
+                    f"core/selector.py:is_satisfied")

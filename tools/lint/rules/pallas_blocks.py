@@ -1,0 +1,104 @@
+"""GL108 pallas-blockspec: every dimension of a Pallas ``BlockSpec`` block
+shape must be a compile-time constant the kernel's grid math can divide —
+an int literal, or a name produced by the padding helpers (``_pick`` /
+``_round_up``-family, which round to a power-of-two block and pad the
+operand).  A dim lifted straight off ``x.shape`` re-specializes the kernel
+for every new input shape and, off the pow2 grid, silently falls back to
+the slow path (the fused_mlp ``_pick`` redesign exists to prevent exactly
+this).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Set
+
+from ..core import FileContext, Finding, Rule
+
+_PAD_HELPER = re.compile(r"(^|\.)(_?pick(_block)?|_?round_up|_?next_pow2)$")
+
+
+def _shape_derived(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr == "shape":
+            return True
+    return False
+
+
+class PallasBlockSpec(Rule):
+    name = "pallas-blockspec"
+    code = "GL108"
+    description = ("BlockSpec dim taken from a runtime .shape instead of an "
+                   "int constant or the _pick/_round_up padding helpers")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn in ctx.functions():
+            bindings = self._bindings(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = ctx.call_name(node)
+                if not name or not name.endswith("BlockSpec"):
+                    continue
+                shape_arg = node.args[0] if node.args else None
+                for kw in node.keywords:
+                    if kw.arg == "block_shape":
+                        shape_arg = kw.value
+                if isinstance(shape_arg, ast.Tuple):
+                    for el in shape_arg.elts:
+                        yield from self._check_dim(ctx, el, bindings)
+
+    def _bindings(self, fn) -> Dict[str, List[ast.Assign]]:
+        """name -> assignments binding it (in source order), this scope."""
+        out: Dict[str, List[ast.Assign]] = {}
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            for t in node.targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name):
+                        out.setdefault(sub.id, []).append(node)
+        return out
+
+    def _check_dim(self, ctx: FileContext, el: ast.AST,
+                   bindings: Dict[str, List[ast.Assign]]) -> Iterator[Finding]:
+        if isinstance(el, ast.Constant):
+            return
+        if _shape_derived(el):
+            yield self.finding(
+                ctx, el,
+                "BlockSpec dim computed from a runtime .shape; route it "
+                "through _pick/_round_up so the block is a padded pow2 "
+                "constant")
+            return
+        if isinstance(el, ast.Name):
+            binding = self._latest_binding(el, bindings)
+            if binding is None:
+                return      # parameter / outer-scope: not provably bad
+            if self._is_padded(ctx, binding):
+                return
+            if self._binds_from_shape(el.id, binding):
+                yield self.finding(
+                    ctx, el,
+                    f"BlockSpec dim '{el.id}' is unpacked from a runtime "
+                    f".shape; route it through _pick/_round_up so the "
+                    f"block is a padded pow2 constant")
+
+    def _latest_binding(self, el: ast.Name,
+                        bindings: Dict[str, List[ast.Assign]]
+                        ) -> Optional[ast.Assign]:
+        prior = [b for b in bindings.get(el.id, ())
+                 if b.lineno <= el.lineno]
+        return prior[-1] if prior else None
+
+    def _is_padded(self, ctx: FileContext, binding: ast.Assign) -> bool:
+        v = binding.value
+        if isinstance(v, ast.Constant):
+            return True
+        if isinstance(v, ast.Call):
+            name = ctx.call_name(v)
+            return bool(name and _PAD_HELPER.search(name))
+        return False
+
+    def _binds_from_shape(self, name: str, binding: ast.Assign) -> bool:
+        return _shape_derived(binding.value)

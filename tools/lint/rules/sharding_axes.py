@@ -1,0 +1,81 @@
+"""GL104 pspec-unknown-axis: every ``PartitionSpec`` axis name must exist
+in the repo's meshes.  The only axes this codebase ever creates are
+``pod``/``data``/``model`` (train/shardings.py) and the serve-side task
+mesh reuses ``data`` (core/shard.py); a spec naming anything else shards
+over a nonexistent axis and jax raises — or worse, a typo'd
+``PartitionSpec(())`` entry silently replicates what was meant to be
+sharded (the PR-6 bug).  Flags unknown axis strings, empty-tuple entries,
+and the same axis used twice in one spec.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from ..core import FileContext, Finding, Rule
+
+#: the only mesh axis names constructed anywhere in this repo
+#: (train/shardings.py make_mesh and core/shard.py task mesh)
+KNOWN_AXES = {"pod", "data", "model"}
+
+_PSPEC_NAMES = {"jax.sharding.PartitionSpec",
+                "jax.experimental.pjit.PartitionSpec",
+                "PartitionSpec", "P"}
+
+
+class PSpecUnknownAxis(Rule):
+    name = "pspec-unknown-axis"
+    code = "GL104"
+    description = ("PartitionSpec axis not in the repo meshes "
+                   "(pod/data/model), empty-tuple entry, or duplicate axis")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        pspec_locals = self._pspec_aliases(ctx)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = ctx.call_name(node)
+            if name not in _PSPEC_NAMES and name not in pspec_locals:
+                continue
+            seen: Set[str] = set()
+            for arg in node.args:
+                yield from self._check_entry(ctx, arg, seen)
+
+    def _pspec_aliases(self, ctx: FileContext) -> Set[str]:
+        """Module-level `P = jax.sharding.PartitionSpec` style aliases."""
+        out: Set[str] = set()
+        for node in ctx.tree.body:
+            if isinstance(node, ast.Assign) and \
+                    ctx.resolve(node.value) in _PSPEC_NAMES:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+        return out
+
+    def _check_entry(self, ctx: FileContext, arg: ast.AST,
+                     seen: Set[str]) -> Iterator[Finding]:
+        if isinstance(arg, ast.Constant):
+            if isinstance(arg.value, str):
+                yield from self._check_axis(ctx, arg, arg.value, seen)
+        elif isinstance(arg, ast.Tuple):
+            if not arg.elts:
+                yield self.finding(
+                    ctx, arg,
+                    "empty-tuple PartitionSpec entry silently replicates "
+                    "this dimension; write None for intentional replication")
+            for el in arg.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    yield from self._check_axis(ctx, el, el.value, seen)
+
+    def _check_axis(self, ctx: FileContext, node: ast.AST, axis: str,
+                    seen: Set[str]) -> Iterator[Finding]:
+        if axis not in KNOWN_AXES:
+            yield self.finding(
+                ctx, node,
+                f"axis '{axis}' is not a mesh axis of this repo "
+                f"(known: {', '.join(sorted(KNOWN_AXES))})")
+        elif axis in seen:
+            yield self.finding(
+                ctx, node,
+                f"axis '{axis}' appears twice in one PartitionSpec")
+        seen.add(axis)
