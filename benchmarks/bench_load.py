@@ -76,8 +76,8 @@ def build_engines(quick: bool) -> Dict[str, GANDSE]:
         eng = GANDSE(model, cfg, ExplorerConfig(prob_threshold=0.1,
                                                 max_candidates=256))
         ds = generate_dataset(model, 256, seed=i)
-        eng.attach(ds, G.init_generator(jax.random.PRNGKey(3 + i), cfg,
-                                        model.space))
+        key = jax.random.fold_in(jax.random.PRNGKey(3), i)
+        eng.attach(ds, G.init_generator(key, cfg, model.space))
         out[model.name] = eng
     return out
 

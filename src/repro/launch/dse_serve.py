@@ -84,8 +84,8 @@ def main(argv=None) -> int:
         engine.train(args.data, args.train_iters, seed=args.seed)
     else:
         ds = generate_dataset(model, args.data, seed=args.seed)
-        engine.attach(ds, G.init_generator(jax.random.PRNGKey(args.seed + 3),
-                                           gan_cfg, model.space))
+        init_key = jax.random.fold_in(jax.random.PRNGKey(args.seed), 3)
+        engine.attach(ds, G.init_generator(init_key, gan_cfg, model.space))
 
     srv = DSEServer(ServeConfig(max_batch=args.max_batch,
                                 cache_capacity=args.cache,
