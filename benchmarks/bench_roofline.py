@@ -22,8 +22,8 @@ def load(path=None):
             r = json.loads(line)
             try:
                 r["arch"] = configs.get_arch(r["arch"]).name  # canonical id
-            except Exception:
-                pass
+            except (ImportError, AttributeError):
+                pass    # unknown arch in an old record: keep the raw name
             recs[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
     return list(recs.values())
 

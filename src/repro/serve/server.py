@@ -387,8 +387,9 @@ class DSEServer:
             try:
                 results = engine.explore_tasks(batch.tasks, seed=batch.seeds)
                 info["probe"] = "ok"
-            except Exception:
+            except Exception as e:
                 info["probe"] = "failed"
+                info["probe_error"] = repr(e)
                 info["degraded"] = True
                 results = self._host_route(engine, batch)
         else:
