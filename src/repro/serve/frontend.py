@@ -41,10 +41,11 @@ import threading
 import time
 from collections import OrderedDict, deque
 from concurrent.futures import Future
-from typing import Dict, Optional, Tuple
+from typing import Deque, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serve.batcher import MicroBatch
 from repro.serve.request import SOURCE_REJECTED, DSEResponse
 from repro.serve.server import DSEServer, _now
 
@@ -65,7 +66,7 @@ class FrontendConfig:
     latency_window: int = 4096   # submit->response samples kept for p50/p99
 
 
-def _percentiles(samples) -> Dict[str, float]:
+def _percentiles(samples: Iterable[float]) -> Dict[str, float]:
     if not samples:
         return {"n": 0, "p50_ms": float("nan"), "p99_ms": float("nan"),
                 "mean_ms": float("nan"), "max_ms": float("nan")}
@@ -99,12 +100,13 @@ class ServeFrontend:
         # responses for rids never submitted through this front end (mixed
         # sync use) cannot accumulate
         self._early: "OrderedDict[int, DSEResponse]" = OrderedDict()
-        self._latencies = deque(maxlen=max(self.cfg.latency_window, 1))
-        self._prepared: "queue.Queue[Optional[object]]" = queue.Queue(
+        self._latencies: Deque[float] = deque(
+            maxlen=max(self.cfg.latency_window, 1))
+        self._prepared: "queue.Queue[Optional[MicroBatch]]" = queue.Queue(
             maxsize=max(self.cfg.max_prepared, 1))
         self._running = False
         self._stopping = False
-        self._threads = []
+        self._threads: List[threading.Thread] = []
         server.on_response = self._on_response
 
     # ---- lifecycle ---------------------------------------------------------
@@ -150,11 +152,11 @@ class ServeFrontend:
     def __enter__(self) -> "ServeFrontend":
         return self.start()
 
-    def __exit__(self, *exc) -> None:
+    def __exit__(self, *exc: object) -> None:
         self.stop(drain=True)
 
     # ---- submission --------------------------------------------------------
-    def submit(self, model_name: str, net_idx, lat_obj: float,
+    def submit(self, model_name: str, net_idx: np.ndarray, lat_obj: float,
                pow_obj: float, seed: int = 0,
                timeout_s: Optional[float] = None) -> Future:
         """Non-blocking submit; returns a Future resolving to the request's
@@ -164,13 +166,15 @@ class ServeFrontend:
         With ``admission="block"`` and a full queue this call waits for
         space (backpressure); with ``admission="reject"`` it returns an
         already-resolved REJECTED future."""
-        if not self._running:
-            raise RuntimeError("ServeFrontend not started (use start() or "
-                               "a with-block)")
         t = timeout_s if timeout_s is not None else self.cfg.default_timeout_s
         deadline = None if t is None or not math.isfinite(t) else _now() + t
         fut: Future = Future()
         with self._space:
+            # checked under the lock: a lock-free read races stop(), which
+            # flips _running while draining _futures
+            if not self._running:
+                raise RuntimeError("ServeFrontend not started (use start() "
+                                   "or a with-block)")
             if self.cfg.admission == "block" and self.server.cfg.max_queue > 0:
                 while (not self._stopping
                        and self.server.batcher.pending(model_name)
@@ -187,11 +191,11 @@ class ServeFrontend:
                 self._futures[rid] = fut
                 self._meta[rid] = (model_name, t0)
         self._work.set()
-        fut.rid = rid
+        fut.rid = rid  # type: ignore[attr-defined]
         return fut
 
-    def submit_network(self, model_name: str, desc, lat_obj: float,
-                       pow_obj: float, seed: int = 0,
+    def submit_network(self, model_name: str, desc: Dict[str, float],
+                       lat_obj: float, pow_obj: float, seed: int = 0,
                        timeout_s: Optional[float] = None) -> Future:
         from repro.core.dse_api import parse_network
         net_idx = parse_network(desc, self.server.engines[model_name].model)
@@ -228,7 +232,9 @@ class ServeFrontend:
                 self._prepared.put(batch)
                 continue
             pending = srv.batcher.pending()
-            if self._stopping and pending == 0:
+            with self._lock:
+                stopping = self._stopping
+            if stopping and pending == 0:
                 break
             if pending == 0:
                 self._work.wait(timeout=0.05)
@@ -264,9 +270,10 @@ class ServeFrontend:
                 self._space.notify_all()
 
     # ---- response plumbing -------------------------------------------------
-    def _on_response(self, resp: DSEResponse) -> None:
+    def _on_response(self, resp: DSEResponse) -> None:  # lint: disable=lock-discipline
         # called from DSEServer._respond — always under self._lock (every
-        # server-state mutation happens inside it)
+        # server-state mutation happens inside it), so taking it again
+        # here would only recurse on the RLock
         fut = self._futures.pop(resp.rid, None)
         if fut is None:
             self._early[resp.rid] = resp
@@ -275,8 +282,10 @@ class ServeFrontend:
             return
         self._resolve(fut, resp.rid, resp)
 
-    def _resolve(self, fut: Future, rid: int, resp: DSEResponse,
+    def _resolve(self, fut: Future, rid: int, resp: DSEResponse,  # lint: disable=lock-discipline
                  t0: Optional[float] = None) -> None:
+        # contract: only reached from submit() / _on_response(), both of
+        # which already hold self._lock
         meta = self._meta.pop(rid, None)
         if t0 is None and meta is not None:
             t0 = meta[1]
