@@ -135,6 +135,9 @@ def grouped_cross_entropy(space: ConfigSpace, target_onehot, probs) -> jnp.ndarr
     return -jnp.sum(target_onehot * jnp.log(probs + eps), axis=-1)
 
 
+# a training loss over dataset labels, not a feasibility judge: the oracle
+# guarantees finite metrics before they reach here.
+# lint: disable=nan-transparent-violation
 def satisfaction_ce(logits, sat_true: jnp.ndarray) -> jnp.ndarray:
     """E(Sat, label): 2-class CE; sat_true is bool/float (B,). (B,)"""
     labels = jnp.stack([1.0 - sat_true, sat_true], axis=-1)  # [False, True]
