@@ -44,12 +44,9 @@ class ExplorerConfig:
     noise_samples: int = 1     # forward passes with independent noise
 
 
-def pow2_bucket(n: int, floor: int = 2) -> int:
-    """Smallest power of two >= max(n, floor): the jit-cache bucketing rule
-    shared by candidate padding (``C_pad``), Algorithm 2 padding, and the
-    serve micro-batcher, so every dynamic extent compiles at most
-    log2(max) programs."""
-    return 1 << (max(int(n), floor) - 1).bit_length()
+# canonical definition lives beside the padding helpers it feeds;
+# re-exported here for the historical import path (selector, batcher)
+pow2_bucket = shard.pow2_bucket
 
 
 def row_seeds(seed, n: int) -> np.ndarray:

@@ -87,6 +87,14 @@ def active_n_shards() -> int:
     return n_task_shards(get_task_mesh())
 
 
+def pow2_bucket(n: int, floor: int = 2) -> int:
+    """Smallest power of two >= max(n, floor): the jit-cache bucketing rule
+    shared by candidate padding (``C_pad``), Algorithm 2 padding, the serve
+    micro-batcher, and ``pad_tasks``, so every dynamic extent compiles at
+    most log2(max) programs."""
+    return 1 << (max(int(n), floor) - 1).bit_length()
+
+
 def pad_rows(n: int, multiple: int) -> Optional[np.ndarray]:
     """Row gather padding `n` up to the next multiple with the batcher's
     repeat-last-row rule; None when already aligned."""
@@ -97,16 +105,23 @@ def pad_rows(n: int, multiple: int) -> Optional[np.ndarray]:
 
 
 def pad_tasks(tasks, seeds: np.ndarray, mesh: Optional[Mesh] = None):
-    """Pad a task batch (and its per-row seed array) to a multiple of the
-    active shard count.  Returns ``(tasks, seeds, n_real)`` — a no-op
-    (n_real == len(tasks)) when no mesh is active or the batch already
-    divides.  Padded rows repeat the last real row, seed included; their
-    results are computed and discarded, and — the parity contract — they
-    cannot perturb real rows, every lane being vmap-independent.
+    """Pad a task batch (and its per-row seed array) to the batcher's
+    bucket: ``n_shards * pow2_bucket(ceil(n / n_shards))`` (plain pow2
+    when no mesh is active).  Returns ``(tasks, seeds, n_real)``.  The
+    bucketing makes *direct* ``explore_batch`` calls share one jit cache
+    entry across every in-bucket task count, the same contract the serve
+    micro-batcher keeps for the dispatch path.  Padded rows repeat the
+    last real row, seed included; their results are computed and
+    discarded, and — the parity contract — they cannot perturb real rows,
+    every lane being vmap-independent.
     """
     mesh = get_task_mesh() if mesh is None else mesh
     n = len(tasks)
-    rows = pad_rows(n, n_task_shards(mesh))
+    if n == 0:
+        return tasks, seeds, 0
+    shards = max(n_task_shards(mesh), 1)
+    target = shards * pow2_bucket(-(-n // shards), floor=1)
+    rows = pad_rows(n, target)
     if rows is None:
         return tasks, seeds, n
     return tasks.take(rows), np.asarray(seeds)[rows], n

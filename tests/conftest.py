@@ -7,6 +7,23 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def no_recompile():
+    """`with no_recompile():` — fail the test if the block triggers any
+    XLA compilation (wrap warm hot paths only).  Pass `allowed=n` to
+    permit a known number.  See tools/lint/recompile_guard.py."""
+    from tools.lint.recompile_guard import assert_no_recompiles
+    return assert_no_recompiles
+
+
+@pytest.fixture
+def track_compiles():
+    """`with track_compiles() as rec:` — observe `rec.count` XLA
+    compilations triggered by the block."""
+    from tools.lint import recompile_guard
+    return recompile_guard.track_compiles
+
+
 @pytest.fixture(scope="session")
 def tiny_gan_cfg():
     """Factory for the shared reduced-scale GANConfig used across tier-1

@@ -256,9 +256,15 @@ def test_pad_tasks_roundtrip():
     np.testing.assert_array_equal(t_p.net_idx[:6], tasks.net_idx)
     np.testing.assert_array_equal(t_p.net_idx[6:], tasks.net_idx[[5, 5]])
     np.testing.assert_array_equal(s_p, list(range(100, 106)) + [105, 105])
-    # no mesh: identity
+    # no mesh: plain pow2 bucket (same rule as the micro-batcher), so
+    # direct explore_batch calls share one jit cache entry per bucket
     t_id, s_id, n_id = shard.pad_tasks(tasks, seeds, mesh=None)
-    assert t_id is tasks and n_id == 6
+    assert n_id == 6 and len(t_id) == 8
+    np.testing.assert_array_equal(t_id.net_idx[:6], tasks.net_idx)
+    np.testing.assert_array_equal(t_id.net_idx[6:], tasks.net_idx[[5, 5]])
+    # an aligned batch is untouched
+    t8, s8, n8 = shard.pad_tasks(t_id, s_id, mesh=None)
+    assert t8 is t_id and n8 == 8
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,99 @@
+"""Runtime complement to repro-lint: count XLA compilations, pin hot paths.
+
+The static rules catch retrace *patterns* (GL109); this guard catches the
+retrace *events* the patterns cause.  It hooks ``jax.monitoring``'s
+duration events — ``/jax/core/compile/backend_compile_duration`` fires
+exactly once per backend compilation, and cache-hit dispatches fire
+nothing — so a warm hot path wrapped in `assert_no_recompiles()` proves
+the pow2-bucketing/cache-key contract holds: in-bucket shape variation
+must not grow the jit cache.
+
+jax.monitoring has no per-listener unregister, so one module-level
+listener is installed lazily on first use and never removed; context
+managers snapshot the monotonic counter around their block.
+
+Usage::
+
+    from tools.lint.recompile_guard import assert_no_recompiles, track_compiles
+
+    with track_compiles() as rec:      # observe
+        f(x)
+    print(rec.count)
+
+    with assert_no_recompiles():       # enforce (raises RecompileError)
+        f(y)                           # y in the same bucket as the warmup
+
+    def test_hot_path(no_recompile):   # pytest fixture (tests/conftest.py)
+        warmup()
+        with no_recompile():
+            serve()
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_counts = {"compiles": 0}
+_installed = False
+
+
+class RecompileError(AssertionError):
+    """A guarded block triggered more XLA compilations than allowed."""
+
+
+def _listener(event: str, duration: float, **kwargs) -> None:
+    if event == _COMPILE_EVENT:
+        _counts["compiles"] += 1
+
+
+def _ensure_listener() -> None:
+    global _installed
+    if _installed:
+        return
+    import jax.monitoring
+    jax.monitoring.register_event_duration_secs_listener(_listener)
+    _installed = True
+
+
+def compile_count() -> int:
+    """Monotonic count of backend compilations observed since the
+    listener was installed (this process, all devices)."""
+    _ensure_listener()
+    return _counts["compiles"]
+
+
+@dataclasses.dataclass
+class CompileRecord:
+    """Filled in when the tracking block exits."""
+    count: int = 0
+
+
+@contextlib.contextmanager
+def track_compiles() -> Iterator[CompileRecord]:
+    """Observe how many XLA compilations the block triggers."""
+    _ensure_listener()
+    rec = CompileRecord()
+    start = _counts["compiles"]
+    try:
+        yield rec
+    finally:
+        rec.count = _counts["compiles"] - start
+
+
+@contextlib.contextmanager
+def assert_no_recompiles(allowed: int = 0,
+                         label: str = "") -> Iterator[CompileRecord]:
+    """Fail with `RecompileError` when the block compiles more than
+    `allowed` times.  Wrap *warm* paths only — warm the cache first."""
+    with track_compiles() as rec:
+        yield rec
+    if rec.count > allowed:
+        where = f" in {label}" if label else ""
+        raise RecompileError(
+            f"{rec.count} XLA compilation(s){where} where at most "
+            f"{allowed} allowed: a hot path is retracing (cache key or "
+            f"pow2 bucketing broke; see tools/lint GL109 and "
+            f"core/explorer.py pow2_bucket)")
