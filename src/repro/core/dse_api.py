@@ -11,9 +11,9 @@
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
-from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
+from typing import (Dict, List, Optional, Protocol, Sequence, Union,
+                    runtime_checkable)
 
 import numpy as np
 
@@ -40,7 +40,12 @@ def parse_network(desc: Dict[str, float], model: DesignModel) -> np.ndarray:
     return model.net_space.indices_from_values(vals)[0]
 
 
-def cache_key(model_name: str, net_idx, lat_obj, pow_obj, seed) -> tuple:
+#: scalar-or-per-row-array seed accepted by every batch entry point
+SeedLike = Union[int, np.ndarray]
+
+
+def cache_key(model_name: str, net_idx: np.ndarray, lat_obj: float,
+              pow_obj: float, seed: int) -> tuple:
     """Hashable identity of one DSE task row: what the serving result cache
     keys on.  Two submissions with equal keys are guaranteed the same
     Selection by the batched-vs-sequential parity contract (the per-task
@@ -95,12 +100,12 @@ class DSEMethod(Protocol):
     method_name: str
 
     def train(self, n_data: int, iters: int, seed: int = 0,
-              ds: Optional[Dataset] = None, log_every: int = 0): ...
+              ds: Optional[Dataset] = None, log_every: int = 0) -> object: ...
 
     def explore(self, net_idx: np.ndarray, lat_obj: float, pow_obj: float,
                 seed: int = 0) -> "DSEResult": ...
 
-    def explore_tasks(self, tasks: DSETask, seed: int = 0
+    def explore_tasks(self, tasks: DSETask, seed: SeedLike = 0
                       ) -> List["DSEResult"]: ...
 
 
@@ -136,6 +141,7 @@ class GANDSE:
         flipping back to a previously used setting never recompiles."""
         self.gan_cfg = dataclasses.replace(self.gan_cfg, use_fused=use_fused)
         if self._explorer is not None:
+            assert self.ds is not None    # an attached explorer implies it
             self.attach(self.ds, self._explorer.g_params)
         return self
 
@@ -160,7 +166,8 @@ class GANDSE:
         sel = select(self.model, net_idx, cands, lat_obj, pow_obj)
         return DSEResult(sel, float(lat_obj), float(pow_obj), time.time() - t0)
 
-    def explore_batch(self, tasks: DSETask, seed: int = 0) -> List[DSEResult]:
+    def explore_batch(self, tasks: DSETask,
+                      seed: SeedLike = 0) -> List[DSEResult]:
         """Batched device-resident exploration: vmapped G inference ->
         on-device candidate enumeration -> batched Algorithm 2, one dispatch
         chain for the whole task batch.  Task i returns the same Selection
@@ -173,11 +180,14 @@ class GANDSE:
         amortized per-task wall-clock (total / n_tasks).  Models without a
         jnp oracle fall back to the sequential host route.
 
-        Under an active task mesh (``shard.set_task_mesh``) the batch is
-        padded to a multiple of the shard count (repeat-last-row, results
-        discarded) and the whole chain — G inference, candidate
-        enumeration, Algorithm 2 — runs task-sharded across the mesh.
-        Selections are bit-identical to the single-device run.
+        The task batch is padded to its pow2 bucket (``shard.pad_tasks``,
+        repeat-last-row, results discarded), so every in-bucket task count
+        reuses one compiled program — the same jit-cache contract the
+        serve micro-batcher keeps.  Under an active task mesh
+        (``shard.set_task_mesh``) the padded size is additionally a
+        multiple of the shard count and the whole chain — G inference,
+        candidate enumeration, Algorithm 2 — runs task-sharded across the
+        mesh.  Selections are bit-identical to the single-device run.
         """
         assert self._explorer is not None, "call train() or attach() first"
         n_tasks = int(tasks.net_idx.shape[0])
@@ -199,7 +209,7 @@ class GANDSE:
             for i, sel in enumerate(sels[:n_real])
         ]
 
-    def explore_tasks(self, tasks: DSETask, seed: int = 0,
+    def explore_tasks(self, tasks: DSETask, seed: SeedLike = 0,
                       batched: Optional[bool] = None) -> List[DSEResult]:
         """Explore a task batch.  batched=None (default) routes through
         `explore_batch` whenever the model has a jnp oracle; False forces
@@ -211,7 +221,7 @@ class GANDSE:
             return self.explore_batch(tasks, seed=seed)
         return self._explore_seq(tasks, seed)
 
-    def _explore_seq(self, tasks: DSETask, seed) -> List[DSEResult]:
+    def _explore_seq(self, tasks: DSETask, seed: SeedLike) -> List[DSEResult]:
         seeds = row_seeds(seed, tasks.net_idx.shape[0])
         return [
             self.explore(tasks.net_idx[i], tasks.lat_obj[i], tasks.pow_obj[i],
