@@ -47,7 +47,7 @@ def main():
 
     stream = SyntheticStream(DataConfig(vocab=m.vocab, seq_len=args.seq,
                                         global_batch=args.batch))
-    ckpt = CheckpointManager(args.ckpt_dir, keep_n=2)
+    ckpt = CheckpointManager(args.ckpt_dir, keep_last_n=2)
 
     t0 = time.time()
     losses = []

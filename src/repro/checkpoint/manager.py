@@ -59,7 +59,14 @@ def _crc(arr: np.ndarray) -> int:
 @dataclasses.dataclass
 class CheckpointManager:
     directory: str
-    keep_n: int = 3
+    #: retention bound: prune to the newest N steps after every save (0
+    #: disables pruning).  Retention is conservative by construction: it
+    #: deletes nothing unless the just-saved step verifies (manifest +
+    #: checksums), a pruned step is atomically de-listed (rename) before
+    #: its payload is deleted, and stray aside/prune dirs left by crashed
+    #: saves or prunes are swept on the next save — a long online loop
+    #: (`repro.serve.online`) holds steady disk instead of filling it.
+    keep_last_n: int = 3
     host_index: int = 0
     host_count: int = 1
 
@@ -116,7 +123,7 @@ class CheckpointManager:
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
-        self._gc()
+        self._gc(new_step=step)
         return sdir
 
     # ---- restore ---------------------------------------------------------------
@@ -205,7 +212,38 @@ class CheckpointManager:
         return self._load_manifest(step)["extra"]
 
     # ---- gc ----------------------------------------------------------------
-    def _gc(self):
-        steps = self.steps()
-        for s in steps[: -self.keep_n] if self.keep_n else []:
-            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+    def _gc(self, new_step: Optional[int] = None) -> None:
+        """``keep_last_n`` retention + stray sweep, run after every save.
+
+        Prunes steps older than the newest ``keep_last_n`` — but only once
+        the just-saved step passes ``verify`` (manifest parse + payload
+        checksums): if the newest save is torn or already damaged, nothing
+        is deleted, so the good history ``restore_latest`` falls back on
+        survives.  Then sweeps aside/prune dirs (``.old_step_*``,
+        ``.prune_*``) orphaned by a crash mid-save or mid-prune — they are
+        invisible to ``steps()`` but used to leak disk forever.
+        """
+        if new_step is not None:
+            try:
+                self.verify(new_step)
+            except (CheckpointCorruptionError, OSError):
+                return      # never prune on the strength of an unverified save
+        if self.keep_last_n > 0:
+            for s in self.steps()[: -self.keep_last_n]:
+                self._remove_step(s)
+        for d in os.listdir(self.directory):
+            if d.startswith((".old_step_", ".prune_")):
+                shutil.rmtree(os.path.join(self.directory, d),
+                              ignore_errors=True)
+
+    def _remove_step(self, step: int) -> None:
+        """Crash-safe prune: rename the step dir aside first (one atomic
+        op de-lists it from ``steps()``, so a crash mid-delete can never
+        leave a listed step with a half-deleted payload), then delete."""
+        doomed = os.path.join(self.directory, f".prune_step_{step:09d}")
+        shutil.rmtree(doomed, ignore_errors=True)
+        try:
+            os.rename(self._step_dir(step), doomed)
+        except OSError:
+            return          # already gone (earlier crashed prune finished it)
+        shutil.rmtree(doomed, ignore_errors=True)

@@ -145,6 +145,13 @@ class GANDSE:
             self.attach(self.ds, self._explorer.g_params)
         return self
 
+    @property
+    def g_params(self) -> Optional[Dict]:
+        """Currently attached generator params (None before
+        ``train()``/``attach()``) — what a checkpoint of the serving state
+        should save (the online loop's generation-0 checkpoint)."""
+        return None if self._explorer is None else self._explorer.g_params
+
     def attach(self, ds: Dataset, g_params: Dict) -> Explorer:
         """Serving entry: wire a dataset (for its normalizers) and trained
         generator params into the explorer without retraining — e.g. params

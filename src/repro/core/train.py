@@ -288,6 +288,19 @@ def make_epoch_fn(model: DesignModel, cfg: G.GANConfig,
     return g_optim, d_optim, epoch
 
 
+@functools.lru_cache(maxsize=16)
+def _cached_epoch_fn(model: DesignModel, cfg: G.GANConfig,
+                     use_jax_oracle: Optional[bool], mesh):
+    """Memoized `make_epoch_fn`: repeated `train_gan` calls on the same
+    (model, cfg, oracle route, mesh) — the online loop's incremental
+    generations — reuse one jitted epoch instead of retracing per call.
+    Keys by model identity (design models are stateless oracles) and by
+    `GANConfig`/mesh value; with the training arrays' shapes held constant
+    (`repro.serve.online.HardReplay` fixes the dataset size for exactly
+    this reason) a warm generation is zero-recompile."""
+    return make_epoch_fn(model, cfg, use_jax_oracle, mesh=mesh)
+
+
 def encode_batch(model: DesignModel, ds: Dataset, idx: np.ndarray) -> Dict[str, np.ndarray]:
     net_idx = ds.net_idx[idx]
     return {
@@ -317,11 +330,20 @@ def train_gan(
     log_every: int = 0,
     use_jax_oracle: Optional[bool] = None,
     mesh=None,
+    state: Optional[TrainState] = None,
 ) -> TrainState:
     """Mini-batch alternating training (Algorithm 1, lines 1-21).
 
     Each iteration is one device-resident ``lax.scan`` over the epoch's
     batches; the dataset is encoded and uploaded exactly once.
+
+    ``state`` warm-starts from an earlier `TrainState` (params, optimizer
+    moments, and rng all resume; ``seed`` then only drives the epoch
+    permutations): the incremental-training entry the online improvement
+    loop (`repro.serve.online`) uses to fine-tune generation N from
+    generation N-1 instead of re-initializing.  The jitted epoch is
+    memoized on (model, cfg, oracle route, mesh), so warm incremental
+    calls do not retrace.
 
     ``mesh=None`` picks up the active task mesh (``shard.set_task_mesh``);
     with one, each epoch runs data-parallel over the mesh's batch axes —
@@ -335,14 +357,18 @@ def train_gan(
     if shard.n_task_shards(mesh) <= 1 or min(cfg.batch_size, ds.n) % \
             shard.n_task_shards(mesh) != 0:
         mesh = None
-    rng = jax.random.PRNGKey(seed)
-    rng, g_rng, d_rng = jax.random.split(rng, 3)
-    g_params = G.init_generator(g_rng, cfg, model.space)
-    d_params = G.init_discriminator(d_rng, cfg, model.space)
-    g_optim, d_optim, epoch = make_epoch_fn(model, cfg, use_jax_oracle,
-                                            mesh=mesh)
-    g_opt = g_optim.init(g_params)
-    d_opt = d_optim.init(d_params)
+    g_optim, d_optim, epoch = _cached_epoch_fn(model, cfg, use_jax_oracle,
+                                               mesh)
+    if state is not None:
+        g_params, d_params = state.g_params, state.d_params
+        g_opt, d_opt, rng = state.g_opt, state.d_opt, state.rng
+    else:
+        rng = jax.random.PRNGKey(seed)
+        rng, g_rng, d_rng = jax.random.split(rng, 3)
+        g_params = G.init_generator(g_rng, cfg, model.space)
+        d_params = G.init_discriminator(d_rng, cfg, model.space)
+        g_opt = g_optim.init(g_params)
+        d_opt = d_optim.init(d_params)
 
     np_rng = np.random.default_rng(seed)
     n = ds.n

@@ -6,13 +6,18 @@ result cache and a multi-model registry with params hot-swap.  See
 `repro.serve.server.DSEServer` for the sync event-loop semantics and
 `repro.serve.frontend.ServeFrontend` for the concurrent production front
 end (futures, continuous batching, admission control, deadlines, load
-shedding); `repro.serve.faults` injects faults for the soak harness.
+shedding); `repro.serve.faults` injects faults for the soak harness;
+`repro.serve.online` closes the train-while-serve loop (harvest hard
+tasks -> incremental train -> checkpoint -> lock-disciplined hot swap).
 """
 from repro.serve.batcher import MicroBatch, MicroBatcher  # noqa: F401
 from repro.serve.cache import ResultCache  # noqa: F401
 from repro.serve.faults import (FaultPlan, FaultyEngine,  # noqa: F401
                                 InjectedFault, corrupt_checkpoint)
 from repro.serve.frontend import FrontendConfig, ServeFrontend  # noqa: F401
+from repro.serve.online import (HardReplay, HardTaskBuffer,  # noqa: F401
+                                OnlineConfig, OnlineLoop,
+                                mine_hard_examples)
 from repro.serve.request import (DSERequest, DSEResponse,  # noqa: F401
                                  SOURCE_CACHE, SOURCE_COALESCED,
                                  SOURCE_DISPATCH, SOURCE_FAILED,

@@ -54,6 +54,12 @@ class MicroBatch:
     requests: List[DSERequest]
     tasks: DSETask
     seeds: np.ndarray            # (padded_size,) int64 per-row noise seeds
+    #: per-model params generation the batch was formed under (stamped by
+    #: `DSEServer._pop_ready`).  `publish_batch` compares it against the
+    #: live counter: a swap landing between the lock-free execute and the
+    #: publish invalidated the model's cache entries, so a mismatched
+    #: batch still responds but must not re-cache its (old-params) results.
+    params_gen: int = 0
 
     @property
     def n_real(self) -> int:

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.core.dse_api import DSEResult
 
@@ -32,6 +32,10 @@ class ResultCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # model -> invalidation generation: how many times this model's
+        # entries were dropped (one bump per params swap/re-register) —
+        # the observable the online-loop smoke pins a hot swap by
+        self.invalidations: Dict[str, int] = {}
 
     def __len__(self) -> int:
         with self._lock:
@@ -66,6 +70,8 @@ class ResultCache:
             stale = [k for k in self._d if k[0] == model_name]
             for k in stale:
                 del self._d[k]
+            self.invalidations[model_name] = \
+                self.invalidations.get(model_name, 0) + 1
             return len(stale)
 
     def clear(self) -> None:
@@ -76,4 +82,5 @@ class ResultCache:
         with self._lock:
             return {"size": len(self._d), "capacity": self.capacity,
                     "hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions}
+                    "evictions": self.evictions,
+                    "invalidations": dict(self.invalidations)}

@@ -41,13 +41,17 @@ import threading
 import time
 from collections import OrderedDict, deque
 from concurrent.futures import Future
-from typing import Deque, Dict, Iterable, List, Optional, Tuple
+from typing import (Callable, Deque, Dict, Iterable, List, Optional, Tuple,
+                    TYPE_CHECKING)
 
 import numpy as np
 
 from repro.serve.batcher import MicroBatch
 from repro.serve.request import SOURCE_REJECTED, DSEResponse
 from repro.serve.server import DSEServer, _now
+
+if TYPE_CHECKING:
+    from repro.dataset.generator import Dataset
 
 
 @dataclasses.dataclass
@@ -107,6 +111,11 @@ class ServeFrontend:
         self._running = False
         self._stopping = False
         self._threads: List[threading.Thread] = []
+        # response observers (the online loop's hard-example harvest tap);
+        # called under the front-end lock for every server response
+        self._listeners: List[Callable[[DSEResponse], None]] = []
+        self._listener_errors = 0
+        self._last_listener_error: Optional[str] = None
         server.on_response = self._on_response
 
     # ---- lifecycle ---------------------------------------------------------
@@ -202,6 +211,35 @@ class ServeFrontend:
         return self.submit(model_name, net_idx, lat_obj, pow_obj, seed=seed,
                            timeout_s=timeout_s)
 
+    # ---- params hot-swap ---------------------------------------------------
+    def swap(self, model_name: str, ds: "Dataset", g_params: Dict) -> int:
+        """Lock-disciplined hot swap: refresh a hosted engine's
+        dataset/params (``DSEServer.swap`` -> ``GANDSE.attach``, zero
+        recompile) *under the front-end lock*, serialized against
+        submission, batch formation, and publication; returns the number
+        of invalidated cache entries.
+
+        This is the only safe swap on a live front end: ``DSEServer.swap``
+        mutates engine and cache state, so calling it directly races the
+        former/dispatcher threads (repro-lint GL111 flags the pattern).
+        A batch already executing when the swap lands is handled by the
+        params-generation stamp — it still answers (with the old params,
+        the documented in-flight semantics) but cannot re-poison the
+        freshly invalidated cache."""
+        with self._lock:
+            return self.server.swap(model_name, ds, g_params)
+
+    def add_response_listener(
+            self, fn: Callable[[DSEResponse], None]) -> None:
+        """Register an observer called for every server response (DONE,
+        FAILED, and REJECTED alike) — the online loop's hard-example
+        harvest tap.  Listeners run under the front-end lock, so they must
+        be fast and non-blocking; a raising listener is counted
+        (``metrics()["frontend"]["listener_errors"]``) and skipped rather
+        than allowed to wedge the pipeline."""
+        with self._lock:
+            self._listeners.append(fn)
+
     def wait_all(self, timeout: Optional[float] = None) -> bool:
         """Block until every submitted request has resolved (no queued
         work, no buffered batches, no outstanding futures); returns False
@@ -274,6 +312,14 @@ class ServeFrontend:
         # called from DSEServer._respond — always under self._lock (every
         # server-state mutation happens inside it), so taking it again
         # here would only recurse on the RLock
+        for listener in self._listeners:
+            try:
+                listener(resp)
+            except Exception as e:
+                # an observer must never take down the pipeline; the error
+                # is recorded (not swallowed silently) for metrics()
+                self._listener_errors += 1
+                self._last_listener_error = repr(e)
         fut = self._futures.pop(resp.rid, None)
         if fut is None:
             self._early[resp.rid] = resp
@@ -306,6 +352,9 @@ class ServeFrontend:
                 "inflight": len(self._futures),
                 "prepared_batches": self._prepared.qsize(),
                 "admission": self.cfg.admission,
+                "listeners": len(self._listeners),
+                "listener_errors": self._listener_errors,
+                "last_listener_error": self._last_listener_error,
                 "latency": _percentiles(list(self._latencies)),
             }
             return s

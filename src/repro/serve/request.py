@@ -85,6 +85,12 @@ class DSEResponse:
     retry_after: Optional[float] = None  # REJECTED only: resubmit-after hint, s
     degraded: bool = False       # computed by the sequential host-oracle
                                  # fallback route (device route was failing)
+    # task identity of answered responses (None on FAILED/REJECTED): with
+    # the result's own objectives these reconstruct the request's cache
+    # key, which is how the online loop (`repro.serve.online`) harvests
+    # unsatisfied responses as deduplicated hard training examples
+    net_idx: Optional[np.ndarray] = None
+    seed: Optional[int] = None
 
     @property
     def cached(self) -> bool:

@@ -131,6 +131,12 @@ class DSEServer:
         self._backoff_until: Dict[str, float] = {}  # model -> monotonic time
         self._degraded: Dict[str, Dict] = {}  # model -> {"ok": n, "since": t}
         self._supports_batched: Dict[str, bool] = {}
+        # model -> params generation: bumped by every swap()/re-register.
+        # Formed batches are stamped with it (see MicroBatch.params_gen)
+        # so publish_batch can tell a result was computed under params the
+        # swap already retired and skip the cache put (the stale-cache
+        # -after-swap race; tests/test_serve_concurrency.py pins it).
+        self._params_gen: Dict[str, int] = {}
         self._rng = random.Random(0x5EED)     # backoff jitter (deterministic)
         #: response hook for the concurrent front end (called synchronously
         #: inside _respond, i.e. under whatever lock the caller holds)
@@ -142,6 +148,7 @@ class DSEServer:
             "rejected": 0, "rejected_queue": 0, "rejected_deadline": 0,
             "degraded_entered": 0, "degraded_recovered": 0,
             "degraded_batches": 0, "probe_failures": 0,
+            "stale_cache_skips": 0,
         }
 
     # ---- registry ----------------------------------------------------------
@@ -153,6 +160,9 @@ class DSEServer:
         one consistent kernel route."""
         name = engine.model.name
         if name in self.engines:
+            # replacing an engine is a params change like any swap: retire
+            # the cache entries and the generation in-flight batches carry
+            self._params_gen[name] = self._params_gen.get(name, 0) + 1
             self.cache.invalidate_model(name)
         if self.cfg.use_fused is not None:
             setter = getattr(engine, "set_use_fused", None)
@@ -171,10 +181,22 @@ class DSEServer:
         (no retrain, no recompile) and invalidate its cached results;
         returns the number of invalidated entries.  Queued requests are
         served by the new params — like any refresh, in-flight work lands
-        on whichever params are attached at dispatch time."""
+        on whichever params are attached at dispatch time.  Bumps the
+        model's params generation, so a batch executing across the swap
+        still responds but cannot re-cache its old-params result.
+
+        On a server wrapped by a live `ServeFrontend`, call
+        ``ServeFrontend.swap`` instead: this method mutates engine and
+        cache state and must run under the front-end lock (repro-lint
+        GL111 flags direct ``.server.swap(...)`` calls)."""
         self.engines[model_name].attach(ds, g_params)
         self.stats["swaps"] += 1
+        self._params_gen[model_name] = self._params_gen.get(model_name, 0) + 1
         return self.cache.invalidate_model(model_name)
+
+    def params_generation(self, model_name: str) -> int:
+        """Monotonic per-model params version (0 until the first swap)."""
+        return self._params_gen.get(model_name, 0)
 
     # ---- admission ---------------------------------------------------------
     def submit(self, model_name: str, net_idx, lat_obj: float,
@@ -211,7 +233,8 @@ class DSEServer:
         key = req.key
         hit = self.cache.get(key)
         if hit is not None:
-            self._respond(DSEResponse(rid, model_name, hit, SOURCE_CACHE))
+            self._respond(DSEResponse(rid, model_name, hit, SOURCE_CACHE,
+                                      net_idx=net_idx, seed=req.seed))
             return rid
         if self.cfg.coalesce_identical and key in self._followers:
             self._followers[key].append(rid)
@@ -312,11 +335,18 @@ class DSEServer:
     def _pop_ready(self, model_name: Optional[str],
                    now: float) -> Optional[MicroBatch]:
         if model_name is not None:
-            return self.batcher.next_batch(model_name)
+            return self._stamp(self.batcher.next_batch(model_name))
         for name in self.batcher.models_with_work():
             if now >= self._backoff_until.get(name, 0.0):
-                return self.batcher.next_batch(name, rotate=True)
+                return self._stamp(self.batcher.next_batch(name, rotate=True))
         return None
+
+    def _stamp(self, batch: Optional[MicroBatch]) -> Optional[MicroBatch]:
+        """Stamp a formed batch with its model's current params generation
+        (a requeued-then-reformed batch gets a fresh stamp)."""
+        if batch is not None:
+            batch.params_gen = self._params_gen.get(batch.model_name, 0)
+        return batch
 
     def step(self, model_name: Optional[str] = None) -> int:
         """Shed expired requests and dispatch one micro-batch (round-robin
@@ -413,8 +443,19 @@ class DSEServer:
         """Publish one executed batch: cache, respond (followers included),
         clear failure bookkeeping, and apply the degraded-route state
         transition recorded by ``execute_batch``.  Mutates shared serving
-        state: the front end calls it under its lock."""
+        state: the front end calls it under its lock.
+
+        When the model's params generation advanced while the batch was
+        executing (a swap landed between the lock-free execute and this
+        publish), the requests are still answered — in-flight work lands
+        on whichever params were attached at dispatch time — but the
+        results are NOT cached: the swap already invalidated the model's
+        entries, and re-inserting a Selection computed under the retired
+        params would serve a stale result forever."""
         name = batch.model_name
+        stale = batch.params_gen != self._params_gen.get(name, 0)
+        if stale:
+            self.stats["stale_cache_skips"] += 1
         self.stats["dispatch_attempts"] += 1
         self.stats["dispatch_s"] += info["elapsed"]
         self.stats["batches"] += 1
@@ -439,15 +480,20 @@ class DSEServer:
             res: DSEResult = results[i]
             key = req.key
             self._attempts.pop(req.rid, None)
-            self.cache.put(key, res)
+            if not stale:
+                self.cache.put(key, res)
             self._respond(DSEResponse(req.rid, name, res, SOURCE_DISPATCH,
                                       batch.n_real,
-                                      degraded=info["degraded"]))
+                                      degraded=info["degraded"],
+                                      net_idx=req.net_idx, seed=req.seed))
             answered += 1
             for rid in self._followers.pop(key, ()):
+                # followers are key-identical to the leader, so the
+                # leader's (net_idx, seed) is theirs too
                 self._respond(DSEResponse(rid, name, res, SOURCE_COALESCED,
                                           batch.n_real,
-                                          degraded=info["degraded"]))
+                                          degraded=info["degraded"],
+                                          net_idx=req.net_idx, seed=req.seed))
                 answered += 1
         return answered
 
@@ -535,6 +581,7 @@ class DSEServer:
         s["backoff"] = {m: round(t - now, 4)
                         for m, t in self._backoff_until.items() if t > now}
         s["degraded"] = sorted(self._degraded)
+        s["params_generation"] = dict(self._params_gen)
         s["inflight_attempts"] = dict(self._attempts)
         def engine_route(e) -> bool:
             # the route this engine's dispatches actually take: the server

@@ -67,7 +67,7 @@ def test_corrupted_payload_raises_on_restore_and_verify(tmp_path):
 def test_restore_latest_skips_corrupted_newest(tmp_path):
     """The swap-time recovery path: newest checkpoint damaged -> fall back
     to the previous good step instead of attaching garbage."""
-    ck = CheckpointManager(str(tmp_path), keep_n=0)
+    ck = CheckpointManager(str(tmp_path), keep_last_n=0)
     good = _tree(1, scale=2.0)
     ck.save(1, _tree(0))
     ck.save(2, good)
@@ -181,3 +181,70 @@ def test_generator_params_roundtrip_attach_parity(tmp_path, tiny_gan_cfg,
         if sa.cfg_idx is not None:
             np.testing.assert_array_equal(sa.cfg_idx, sb.cfg_idx)
         assert sa.latency == sb.latency and sa.power == sb.power, i
+
+
+# ---------------------------------------------------------------------------
+# keep_last_n retention (the online loop's steady-disk contract)
+# ---------------------------------------------------------------------------
+def test_retention_prunes_to_keep_last_n(tmp_path):
+    """Every save prunes to the newest keep_last_n steps — payload dirs
+    actually deleted, not just de-listed."""
+    ck = CheckpointManager(str(tmp_path), keep_last_n=2)
+    for s in range(1, 6):
+        ck.save(s, _tree(s))
+    assert ck.steps() == [4, 5]
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_000000004", "step_000000005"]
+    _assert_tree_equal(ck.restore(5, _tree(5)), _tree(5))
+
+
+def test_no_prune_on_unverified_save(tmp_path, monkeypatch):
+    """Retention is conservative: when the just-saved step fails its own
+    verification (torn write, immediate disk damage), nothing is deleted
+    — the good history restore_latest falls back on must survive."""
+    ck = CheckpointManager(str(tmp_path), keep_last_n=1)
+    ck.save(1, _tree(1))
+
+    def bad_verify(step):
+        raise CheckpointCorruptionError(f"step {step} damaged")
+
+    monkeypatch.setattr(ck, "verify", bad_verify)
+    ck.save(2, _tree(2))             # save lands, but prune is skipped
+    assert ck.steps() == [1, 2]      # step 1 survives the unverified save
+
+
+def test_torn_prune_crash_leaves_consistent_state(tmp_path, monkeypatch):
+    """Crash mid-prune (after the aside rename, before the delete): the
+    pruned step is atomically de-listed — steps() stays consistent and
+    restore_latest works — and the orphaned aside dir is swept by the
+    next save instead of leaking forever."""
+    import repro.checkpoint.manager as M
+
+    ck = CheckpointManager(str(tmp_path), keep_last_n=1)
+    ck.save(1, _tree(1))
+    real = M.shutil.rmtree
+    calls = {"prune": 0}
+
+    def flaky(path, **kw):
+        if os.path.basename(path).startswith(".prune_"):
+            calls["prune"] += 1
+            if calls["prune"] >= 2:     # the post-rename delete
+                raise OSError("disk error mid-prune")
+        return real(path, **kw)
+
+    monkeypatch.setattr(M.shutil, "rmtree", flaky)
+    with pytest.raises(OSError, match="mid-prune"):
+        ck.save(2, _tree(2))
+    # the new step is fully published and restorable; the half-pruned
+    # one is de-listed (never a listed step with half a payload)
+    assert ck.steps() == [2]
+    step, tree = ck.restore_latest(_tree(2))
+    assert step == 2
+    _assert_tree_equal(tree, _tree(2))
+    assert any(d.startswith(".prune_") for d in os.listdir(tmp_path))
+
+    monkeypatch.setattr(M.shutil, "rmtree", real)
+    ck.save(3, _tree(3))                 # sweeps the orphaned aside dir
+    assert ck.steps() == [3]
+    assert [d for d in os.listdir(tmp_path)
+            if d.startswith((".prune_", ".old_step_"))] == []

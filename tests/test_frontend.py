@@ -239,6 +239,57 @@ def test_frontend_metrics_snapshot(engine):
     assert m["dispatch_attempts"] >= m["batches"] >= 1
 
 
+def test_frontend_swap_during_dispatch_parity(tiny_gan_cfg, small_dataset):
+    """Hot-swap parity on a live front end: before the swap, responses
+    match a params-A reference; after `ServeFrontend.swap` to params B,
+    fresh requests match a params-B reference; and *identical re-asks* of
+    pre-swap requests are served by dispatch under the NEW params — the
+    swap's invalidation (plus the params-generation stamp) guarantees no
+    params-A Selection survives in the cache."""
+    cfg = tiny_gan_cfg(MODEL)
+    ds = small_dataset(MODEL, n=256)
+    params_a = G.init_generator(jax.random.PRNGKey(3), cfg, MODEL.space)
+    params_b = G.init_generator(jax.random.PRNGKey(4), cfg, MODEL.space)
+    ecfg = ExplorerConfig(prob_threshold=0.1, max_candidates=128)
+    serving = GANDSE(MODEL, cfg, ecfg)
+    serving.attach(ds, params_a)
+    ref_a = GANDSE(MODEL, cfg, ecfg)          # immutable references
+    ref_a.attach(ds, params_a)
+    ref_b = GANDSE(MODEL, cfg, ecfg)
+    ref_b.attach(ds, params_b)
+
+    tasks = generate_tasks(MODEL, 6, seed=2)
+    direct_a = ref_a.explore_tasks(tasks, seed=7)
+    direct_b = ref_b.explore_tasks(tasks, seed=7)
+    direct_b2 = ref_b.explore_tasks(tasks, seed=107)
+    srv = DSEServer(ServeConfig(max_batch=4))
+    srv.register(serving)
+    with ServeFrontend(srv) as fe:
+        wave_a = _submit_tasks(fe, tasks, 6, seed0=7)
+        for rid, (i, fut) in wave_a.items():
+            _assert_selection_equal("pre-swap", i,
+                                    fut.result(60).result.selection,
+                                    direct_a[i].selection)
+        gen0 = srv.params_generation(MODEL.name)
+        fe.swap(MODEL.name, ds, params_b)
+        assert srv.params_generation(MODEL.name) == gen0 + 1
+        # fresh keys after the swap: the new params serve them
+        wave_b = _submit_tasks(fe, tasks, 6, seed0=107)
+        for rid, (i, fut) in wave_b.items():
+            _assert_selection_equal("post-swap", i,
+                                    fut.result(60).result.selection,
+                                    direct_b2[i].selection)
+        # identical re-asks of wave A: the invalidation dropped their
+        # cached params-A results, so they re-dispatch under params B
+        redo = _submit_tasks(fe, tasks, 6, seed0=7)
+        for rid, (i, fut) in redo.items():
+            resp = fut.result(60)
+            assert resp.source in ("dispatch", "coalesced"), resp.source
+            _assert_selection_equal("re-ask", i, resp.result.selection,
+                                    direct_b[i].selection)
+    assert srv.stats["swaps"] == 1
+
+
 def test_frontend_concurrent_submitters(engine):
     """Many submitter threads at once: the one-lock admission path keeps
     rids unique and every future resolves with the right Selection."""

@@ -182,6 +182,13 @@ FIXTURES = {
                 return float("inf")
             return max(lat - lo, 0.0) + max(pw - po, 0.0)
         """),
+    "GL111": ("mod.py", """
+        def refresh(fe, ds, params):
+            return fe.server.swap("m", ds, params)
+        """, """
+        def refresh(fe, ds, params):
+            return fe.swap("m", ds, params)
+        """),
 }
 
 RULE_NAMES = {r.code: r.name for r in make_rules()}
@@ -347,6 +354,43 @@ def test_reraise_cleanup_is_exempt_in_strict_paths():
                 raise
         """)
     assert lint_source(src, path="src/repro/checkpoint/mod.py") == []
+
+
+def test_swap_under_own_lock_is_clean():
+    """The ServeFrontend.swap shape itself: `self.server.swap` under
+    `with self._lock:` in a lock-owning class is the sanctioned wrapper,
+    not a bypass."""
+    src = textwrap.dedent("""
+        import threading
+
+        class Frontend:
+            def __init__(self, server):
+                self._lock = threading.RLock()
+                self.server = server
+
+            def swap(self, name, ds, params):
+                with self._lock:
+                    return self.server.swap(name, ds, params)
+        """)
+    assert lint_source(src, path="mod.py") == []
+
+
+def test_swap_lock_bypass_fires_in_methods_too():
+    """A lock-owning class calling `.server.swap` while NOT holding its
+    lock is still a bypass."""
+    src = textwrap.dedent("""
+        import threading
+
+        class Loop:
+            def __init__(self, fe):
+                self._lock = threading.Lock()
+                self.fe = fe
+
+            def refresh(self, ds, params):
+                return self.fe.server.swap("m", ds, params)
+        """)
+    findings = lint_source(src, path="mod.py")
+    assert [f.code for f in findings] == ["GL111"]
 
 
 def test_def_span_suppression():

@@ -1,0 +1,222 @@
+"""Tier-1 tests for the online improvement loop (`repro.serve.online`).
+
+Covers the loop's pieces in isolation (hard-task buffer, miner, replay
+region) and the wired-up cycle run synchronously against a live front
+end: one `run_generation()` must train, checkpoint, hot-swap (params
+generation bumped, cache invalidated), and — when the just-written
+checkpoint is corrupted before the swap reads it back — fall back to the
+previous good generation and keep serving.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import gan as G
+from repro.core.dse_api import DSEResult, GANDSE
+from repro.core.explorer import ExplorerConfig
+from repro.core.selector import Selection
+from repro.dataset.generator import generate_tasks
+from repro.design_models.dnnweaver import DnnWeaverModel
+from repro.serve import (DSEServer, HardReplay, HardTaskBuffer, OnlineConfig,
+                         OnlineLoop, ServeConfig, ServeFrontend,
+                         corrupt_checkpoint, mine_hard_examples)
+from repro.serve.request import SOURCE_DISPATCH, SOURCE_FAILED, DSEResponse
+
+
+# ---------------------------------------------------------------------------
+# HardTaskBuffer: harvest policy, dedup, bounded eviction
+# ---------------------------------------------------------------------------
+def _resp(rid, *, satisfied, lat_obj=1.0, pow_obj=1.0, seed=0, net=None,
+          source=SOURCE_DISPATCH, failed=False):
+    net = np.full(3, rid, np.int64) if net is None else net
+    result = None if failed else DSEResult(
+        Selection(np.zeros(3, np.int64), 2.0, 2.0, satisfied, 1),
+        lat_obj, pow_obj, 0.0)
+    return DSEResponse(rid, "m", result,
+                       SOURCE_FAILED if failed else source,
+                       net_idx=None if failed else net,
+                       seed=None if failed else seed)
+
+
+def test_buffer_admits_only_unsatisfied_answers():
+    buf = HardTaskBuffer(capacity=8)
+    assert buf.offer(_resp(1, satisfied=False))          # the hard case
+    assert not buf.offer(_resp(2, satisfied=True))       # solved: not hard
+    assert not buf.offer(_resp(3, satisfied=False, failed=True))  # no result
+    assert len(buf) == 1
+    s = buf.stats()
+    assert (s["offered"], s["admitted"]) == (3, 1)
+
+
+def test_buffer_dedups_on_cache_key():
+    buf = HardTaskBuffer(capacity=8)
+    net = np.array([1, 2, 3], np.int64)
+    assert buf.offer(_resp(1, satisfied=False, net=net, seed=7))
+    # same task identity, new rid (a resubmission): harvested once
+    assert not buf.offer(_resp(2, satisfied=False, net=net, seed=7))
+    # different seed = different cache key = a distinct hard task
+    assert buf.offer(_resp(3, satisfied=False, net=net, seed=8))
+    assert len(buf) == 2
+    assert buf.stats()["deduped"] == 1
+
+
+def test_buffer_evicts_oldest_and_drains_to_tasks():
+    buf = HardTaskBuffer(capacity=4)
+    for i in range(6):
+        assert buf.offer(_resp(i, satisfied=False, lat_obj=float(i + 1)))
+    assert len(buf) == 4
+    assert buf.stats()["evicted"] == 2
+    tasks = buf.take_all()
+    # newest traffic survives: tasks 2..5 (lat_obj 3..6)
+    assert tasks is not None and len(tasks) == 4
+    assert sorted(tasks.lat_obj.tolist()) == [3.0, 4.0, 5.0, 6.0]
+    assert tasks.net_idx.shape == (4, 3)
+    assert len(buf) == 0 and buf.take_all() is None
+    assert buf.stats()["drained"] == 4
+
+
+# ---------------------------------------------------------------------------
+# mine_hard_examples: Algorithm 1 rows near the objective frontier
+# ---------------------------------------------------------------------------
+def test_mined_rows_are_valid_training_samples():
+    model = DnnWeaverModel()
+    tasks = generate_tasks(model, 4, seed=5, slack=(1.0, 1.2))
+    mined = mine_hard_examples(model, tasks, n_samples=64, per_task=3,
+                               rng=np.random.default_rng(1))
+    assert mined is not None
+    net, cfg, lat, pw = mined
+    assert 1 <= lat.shape[0] <= 4 * 3
+    assert net.shape[0] == cfg.shape[0] == lat.shape[0] == pw.shape[0]
+    assert np.all(np.isfinite(lat)) and np.all(np.isfinite(pw))
+    # each row's recorded metrics are the design model's own outputs for
+    # (net, cfg) — a valid (objective, witness) pair as-is
+    lat2, pw2 = model.evaluate_indices(net, cfg)
+    np.testing.assert_allclose(np.asarray(lat2), lat)
+    np.testing.assert_allclose(np.asarray(pw2), pw)
+
+
+# ---------------------------------------------------------------------------
+# HardReplay: fixed shapes across generations
+# ---------------------------------------------------------------------------
+def test_replay_region_keeps_dataset_shape_constant(small_dataset):
+    model = DnnWeaverModel()
+    base = small_dataset(model, n=128)
+    rep = HardReplay(base, capacity=8, seed=0)
+    n0 = rep.dataset().n
+    assert n0 == base.n + 8
+    # 11 rows into capacity 8: round-robin keeps the newest 8
+    marked = 1000.0 + np.arange(11)
+    assert rep.mix_in(base.net_idx[:11], base.cfg_idx[:11],
+                      marked, base.power[:11]) == 11
+    d = rep.dataset()
+    assert d.n == n0                        # shape never moves (zero retrace)
+    tail = sorted(d.latency[base.n:].tolist())
+    assert tail == marked[3:].tolist()      # rows 8..10 overwrote 0..2
+    assert rep.absorbed == 11
+    # base normalization contract untouched
+    np.testing.assert_array_equal(d.net_idx[:base.n], base.net_idx)
+
+
+# ---------------------------------------------------------------------------
+# the wired-up cycle, run synchronously
+# ---------------------------------------------------------------------------
+def _stack(tiny_gan_cfg, small_dataset, key=0):
+    model = DnnWeaverModel()
+    cfg = tiny_gan_cfg(model)
+    eng = GANDSE(model, cfg, ExplorerConfig(prob_threshold=0.1,
+                                            max_candidates=64))
+    ds = small_dataset(model, n=256)
+    eng.attach(ds, G.init_generator(
+        jax.random.fold_in(jax.random.PRNGKey(key), 3), cfg, model.space))
+    srv = DSEServer(ServeConfig(max_batch=8))
+    srv.register(eng)
+    return model, eng, srv
+
+
+def _push_hard_wave(fe, model, n=12, seed=3, req_seed=100):
+    # slack (1.0, 1.0): objectives sit exactly on sampled design points, so
+    # a 64-candidate random-init generator misses most of them — guaranteed
+    # harvest material
+    tasks = generate_tasks(model, n, seed=seed, slack=(1.0, 1.0))
+    futs = [fe.submit(model.name, tasks.net_idx[i], tasks.lat_obj[i],
+                      tasks.pow_obj[i], seed=req_seed + i) for i in range(n)]
+    responses = [f.result(timeout=120) for f in futs]
+    assert all(r.ok for r in responses)
+    return tasks
+
+
+def test_online_generation_trains_swaps_and_invalidates(
+        tiny_gan_cfg, small_dataset, tmp_path):
+    model, eng, srv = _stack(tiny_gan_cfg, small_dataset)
+    ocfg = OnlineConfig(min_hard=4, train_iters=2, mine_samples=64,
+                        replay_capacity=16, seed=0)
+    with ServeFrontend(srv) as fe:
+        loop = OnlineLoop(fe, model.name, str(tmp_path), cfg=ocfg)
+        tasks = _push_hard_wave(fe, model)
+        assert loop.buffer.stats()["admitted"] >= 1
+        gen0 = srv.params_generation(model.name)
+
+        assert loop.run_generation()         # synchronous: no trainer thread
+
+        assert loop.generation == 1 and loop.serving_step == 1
+        assert loop.counters["swaps"] == 1
+        assert loop.counters["swap_fallbacks"] == 0
+        assert loop.counters["mined_rows"] >= 1
+        assert loop.ckpt.steps() == [1]
+        # the swap is visible to the serving tier: params generation bumped,
+        # the model's cache entries dropped
+        assert srv.params_generation(model.name) == gen0 + 1
+        assert srv.summary()["cache"]["invalidations"].get(model.name, 0) >= 1
+        # and serving continues on the new generation
+        f = fe.submit(model.name, tasks.net_idx[0], tasks.lat_obj[0],
+                      tasks.pow_obj[0], seed=999)
+        assert f.result(timeout=120).ok
+        m = loop.metrics()
+        assert m["generation"] == 1 and m["last_error"] is None
+
+
+def test_corrupt_checkpoint_falls_back_to_previous_generation(
+        tiny_gan_cfg, small_dataset, tmp_path):
+    model, eng, srv = _stack(tiny_gan_cfg, small_dataset)
+    params0 = eng.g_params
+    ocfg = OnlineConfig(min_hard=4, train_iters=2, mine_samples=64,
+                        replay_capacity=16, seed=0,
+                        # damage every post-gen-0 save before the swap's
+                        # read-back — the torn-save-during-hot-swap scenario
+                        post_checkpoint=lambda sdir: corrupt_checkpoint(sdir))
+    with ServeFrontend(srv) as fe:
+        loop = OnlineLoop(fe, model.name, str(tmp_path), cfg=ocfg)
+        loop.start()          # writes the generation-0 fallback checkpoint
+        loop.stop()
+        assert loop.ckpt.steps() == [0]
+
+        tasks = _push_hard_wave(fe, model)
+        assert loop.run_generation()
+        # trained generation 1, but its checkpoint would not survive a
+        # crash — so generation 0 serves instead of unrecoverable params
+        assert loop.generation == 1
+        assert loop.counters["swap_fallbacks"] == 1
+        assert loop.serving_step == 0
+        assert loop.counters["swaps"] == 1   # swapped, to the good step
+        # the attached params are bit-exactly generation 0's
+        for a, b in zip(jax.tree_util.tree_leaves(eng.g_params),
+                        jax.tree_util.tree_leaves(params0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # serving never stopped
+        f = fe.submit(model.name, tasks.net_idx[0], tasks.lat_obj[0],
+                      tasks.pow_obj[0], seed=999)
+        assert f.result(timeout=120).ok
+
+
+def test_raising_listener_is_counted_not_fatal(
+        tiny_gan_cfg, small_dataset):
+    model, eng, srv = _stack(tiny_gan_cfg, small_dataset)
+    with ServeFrontend(srv) as fe:
+        fe.add_response_listener(lambda r: 1 / 0)
+        t = generate_tasks(model, 1, seed=9)
+        f = fe.submit(model.name, t.net_idx[0], t.lat_obj[0], t.pow_obj[0],
+                      seed=5)
+        assert f.result(timeout=120).ok      # the response still resolves
+        fm = fe.metrics()["frontend"]
+        assert fm["listener_errors"] == 1
+        assert "ZeroDivisionError" in fm["last_listener_error"]

@@ -65,3 +65,37 @@ def test_warm_serve_dispatch_zero_recompiles(engine, no_recompile):
         drive(6, 23, 3000)
         drive(7, 24, 4000)
     assert srv.stats["batches"] == batches0 + 4   # all four really dispatched
+
+
+def test_swap_path_zero_recompiles(tiny_gan_cfg, small_dataset, no_recompile):
+    """Hot-swap is parameter-only: after warming a bucket, swapping in new
+    generator params (same shapes) and re-dispatching inside the same
+    bucket must not compile anything — the online loop swaps once per
+    generation, so a retrace here would stall serving every few seconds."""
+    model = DnnWeaverModel()
+    cfg = tiny_gan_cfg(model)
+    eng = GANDSE(model, cfg,
+                 ExplorerConfig(prob_threshold=0.1, max_candidates=128))
+    ds = small_dataset(model, n=256)
+    params_a = G.init_generator(jax.random.PRNGKey(3), cfg, model.space)
+    params_b = G.init_generator(jax.random.PRNGKey(9), cfg, model.space)
+    eng.attach(ds, params_a)
+
+    srv = DSEServer(ServeConfig(max_batch=8, cache_capacity=0))
+    srv.register(eng)
+
+    def drive(n, task_seed, req_seed):
+        tasks = generate_tasks(model, n, seed=task_seed)
+        for i in range(n):
+            srv.submit(model.name, tasks.net_idx[i],
+                       tasks.lat_obj[i], tasks.pow_obj[i],
+                       seed=req_seed + i)
+        assert len(srv.drain()) == n
+
+    drive(8, 31, 1000)              # warm bucket 8 with generation-0 params
+    with no_recompile(label="swap + redispatch"):
+        srv.swap(model.name, ds, params_b)
+        drive(6, 32, 2000)
+        srv.swap(model.name, ds, params_a)   # swap back — still warm
+        drive(7, 33, 3000)
+    assert srv.stats["swaps"] == 2

@@ -8,6 +8,10 @@ exactly once (popped XOR shed, never lost, never duplicated), per-thread
 FIFO order survives, and the cache's LRU bound, stat counters, and stored
 values stay consistent.  A property test (hypothesis, or the repo's
 seeded-random `_mini_hypothesis` fallback) varies thread/batch geometry.
+
+The stale-cache-after-swap tests pin the params-generation stamp contract
+on a stub engine: a batch that executes across a `swap` still answers,
+but its results must never re-enter the cache the swap just invalidated.
 """
 import threading
 from collections import Counter
@@ -19,7 +23,10 @@ try:
 except ImportError:  # minimal CI image — seeded-random fallback
     from _mini_hypothesis import given, settings, strategies as st
 
-from repro.serve import DSERequest, MicroBatcher, ResultCache
+from repro.core.dse_api import DSEResult
+from repro.core.selector import Selection
+from repro.serve import (DSERequest, DSEServer, MicroBatcher, ResultCache,
+                         ServeConfig)
 
 _NET = np.array([1, 2, 3], np.int64)
 
@@ -279,3 +286,136 @@ def test_batch_formation_under_concurrency_is_well_formed():
         np.testing.assert_array_equal(
             b.seeds[: b.n_real], [r.seed for r in b.requests])
         assert len({r.model_name for r in b.requests}) == 1
+
+
+# ---------------------------------------------------------------------------
+# the stale-cache-after-swap race (params-generation stamp contract)
+# ---------------------------------------------------------------------------
+class _StubSpace:
+    n_dims = 3
+    group_sizes = (8, 8, 8)
+
+
+class _StubModel:
+    name = "stub"
+    net_space = _StubSpace()
+
+
+class _StubEngine:
+    """Engine whose Selections encode which params version computed them:
+    latency == the params tag attached at the time of explore_tasks."""
+
+    method_name = "stub"
+
+    def __init__(self):
+        self.model = _StubModel()
+        self.params_tag = 0.0
+
+    def attach(self, ds, g_params):
+        self.params_tag = float(g_params)
+
+    def explore_tasks(self, tasks, seed=0, batched=None):
+        tag = self.params_tag
+        return [
+            DSEResult(Selection(np.zeros(3, np.int64), tag, tag, True, 1),
+                      float(tasks.lat_obj[i]), float(tasks.pow_obj[i]), 0.0)
+            for i in range(len(tasks))
+        ]
+
+
+def _stub_server(**kw):
+    srv = DSEServer(ServeConfig(max_batch=4, **kw))
+    srv.register(_StubEngine())
+    return srv
+
+
+def test_swap_between_execute_and_publish_skips_cache():
+    """THE race, deterministically interleaved: form -> execute -> swap ->
+    publish.  The response still answers (old params — the documented
+    in-flight semantics), but the result must NOT enter the cache the
+    swap just invalidated: a later identical submit must re-dispatch and
+    see the new params, not the retired Selection."""
+    srv = _stub_server()
+    rid = srv.submit("stub", _NET, 1.0, 2.0, seed=7)
+    batch = srv.form_batch()
+    assert batch is not None
+    results, info = srv.execute_batch(batch)       # old params (tag 0.0)
+    n_inval = srv.swap("stub", ds=None, g_params=1.0)   # swap lands mid-flight
+    assert n_inval == 0                            # nothing cached yet
+    srv.publish_batch(batch, results, info)
+
+    resp = srv.response(rid)
+    assert resp.ok and resp.result.selection.latency == 0.0  # answered (old)
+    assert srv.stats["stale_cache_skips"] == 1
+    # the poisoning the stamp prevents: an identical re-ask must NOT hit
+    # the cache with the old-params Selection
+    rid2 = srv.submit("stub", _NET, 1.0, 2.0, seed=7)
+    batch2 = srv.form_batch()
+    assert batch2 is not None, "stale result was cached: re-ask hit the LRU"
+    srv.publish_batch(batch2, *srv.execute_batch(batch2))
+    resp2 = srv.response(rid2)
+    assert resp2.result.selection.latency == 1.0   # new params served
+    # and the fresh (post-swap) result IS cached normally
+    rid3 = srv.submit("stub", _NET, 1.0, 2.0, seed=7)
+    assert srv.response(rid3).cached
+
+
+def test_swap_before_form_serves_and_caches_new_params():
+    """Control: a swap that lands before formation stamps the batch with
+    the new generation — its results cache normally (no false stales)."""
+    srv = _stub_server()
+    rid = srv.submit("stub", _NET, 1.0, 2.0, seed=3)
+    srv.swap("stub", ds=None, g_params=5.0)
+    batch = srv.form_batch()
+    srv.publish_batch(batch, *srv.execute_batch(batch))
+    assert srv.response(rid).result.selection.latency == 5.0
+    assert srv.stats["stale_cache_skips"] == 0
+    rid2 = srv.submit("stub", _NET, 1.0, 2.0, seed=3)
+    assert srv.response(rid2).cached
+
+
+def test_swap_race_under_threads_never_poisons_cache():
+    """Barrier-raced swapper vs dispatcher over many rounds: whatever the
+    interleaving, a cached entry must always have been computed under the
+    generation current at publish time — re-asking any key right after
+    wait-free quiescence yields the *current* params' tag."""
+    srv = _stub_server()
+    lock = threading.Lock()   # the front-end lock role (serializes
+                              # form/publish/swap; execute runs outside)
+    rounds = 40
+    tags = []
+
+    def one_round(i):
+        barrier = threading.Barrier(2)
+
+        def dispatcher():
+            with lock:
+                srv.submit("stub", _NET, 1.0, float(i + 2), seed=i)
+                batch = srv.form_batch()
+            results, info = srv.execute_batch(batch)   # lock-free window
+            barrier.wait()                             # maximize overlap
+            with lock:
+                srv.publish_batch(batch, results, info)
+
+        def swapper():
+            barrier.wait()
+            with lock:
+                srv.swap("stub", ds=None, g_params=float(i + 1))
+
+        _run_threads([dispatcher, swapper])
+        # after both: whatever was cached (if anything) must answer with
+        # the CURRENT params tag when re-asked
+        with lock:
+            rid = srv.submit("stub", _NET, 1.0, float(i + 2), seed=i)
+            batch = srv.form_batch()
+        if batch is not None:
+            results, info = srv.execute_batch(batch)
+            with lock:
+                srv.publish_batch(batch, results, info)
+        tags.append(srv.response(rid).result.selection.latency)
+
+    for i in range(rounds):
+        one_round(i)
+    # every re-ask saw the post-swap params of its round, never a retired
+    # generation's Selection resurrected from the cache
+    assert tags == [float(i + 1) for i in range(rounds)]

@@ -163,7 +163,7 @@ def test_data_labels_are_shifted_tokens():
 # ---------------------------------------------------------------------------
 def test_checkpoint_roundtrip(tmp_path):
     from repro.checkpoint.manager import CheckpointManager
-    ck = CheckpointManager(str(tmp_path), keep_n=2)
+    ck = CheckpointManager(str(tmp_path), keep_last_n=2)
     tree = {"a": jnp.arange(6).reshape(2, 3), "b": [jnp.ones(4)]}
     ck.save(10, tree, extra={"foo": 1})
     out = ck.restore(10, tree)
@@ -171,9 +171,9 @@ def test_checkpoint_roundtrip(tmp_path):
     assert ck.restore_extra(10)["foo"] == 1
 
 
-def test_checkpoint_keep_n_and_latest(tmp_path):
+def test_checkpoint_keep_last_n_and_latest(tmp_path):
     from repro.checkpoint.manager import CheckpointManager
-    ck = CheckpointManager(str(tmp_path), keep_n=2)
+    ck = CheckpointManager(str(tmp_path), keep_last_n=2)
     tree = {"a": jnp.zeros(2)}
     for s in (1, 2, 3, 4):
         ck.save(s, tree)

@@ -9,7 +9,7 @@ from .prng import PrngKeyReuse, SeedInt32Overflow
 from .jit_purity import HostSyncInJit, JitPerCall
 from .sharding_axes import PSpecUnknownAxis
 from .donation import DonatedAfterUse
-from .locks import LockDiscipline
+from .locks import LockDiscipline, SwapLockBypass
 from .excepts import OverbroadExcept
 from .pallas_blocks import PallasBlockSpec
 from .nan_guard import NanTransparentViolation
@@ -25,6 +25,7 @@ ALL_RULES = [
     PallasBlockSpec,           # GL108
     JitPerCall,                # GL109
     NanTransparentViolation,   # GL110
+    SwapLockBypass,            # GL111
 ]
 
 

@@ -8,6 +8,14 @@ the lock, so ``with self._space:`` also counts as holding it.
 ``__init__`` is exempt (no concurrent access before construction
 completes).  Methods that are only ever called with the lock already held
 document that contract with a def-line ``# lint: disable=lock-discipline``.
+
+GL111 swap-lock-bypass: the hot-swap race bug class.  ``DSEServer.swap``
+mutates engine and cache state, so on a server wrapped by a live
+``ServeFrontend`` it must run under the front-end lock — that is what the
+locked ``ServeFrontend.swap`` method is for.  A direct
+``<anything>.server.swap(...)`` call reaches around the wrapper and races
+the former/dispatcher threads; the rule flags the pattern anywhere it is
+not under a held ``with self.<lock>:`` block.
 """
 from __future__ import annotations
 
@@ -135,3 +143,48 @@ class LockDiscipline(Rule):
                     isinstance(v.value, ast.Name) and v.value.id == "self":
                 return v.attr
         return None
+
+
+class SwapLockBypass(Rule):
+    name = "swap-lock-bypass"
+    code = "GL111"
+    description = ("direct .server.swap() call bypasses the front-end "
+                   "lock; use the locked ServeFrontend.swap")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        walker = LockDiscipline()
+        visited: Set[int] = set()
+        # inside classes: a held `with self.<lock>:` legitimizes the call
+        # (ServeFrontend.swap itself is exactly that)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            locks = walker._lock_attrs(ctx, node)
+            for m in node.body:
+                if not isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                for sub, held in walker._walk_with_lock(m, locks):
+                    visited.add(id(sub))
+                    if not held and self._is_server_swap(sub):
+                        yield self._flag(ctx, sub)
+        # everywhere else (module level, free functions, nested scopes):
+        # there is no front-end lock to hold, so the pattern is always a
+        # bypass
+        for node in ast.walk(ctx.tree):
+            if id(node) not in visited and self._is_server_swap(node):
+                yield self._flag(ctx, node)
+
+    def _is_server_swap(self, node: ast.AST) -> bool:
+        return (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "swap"
+                and isinstance(node.func.value, ast.Attribute)
+                and node.func.value.attr == "server")
+
+    def _flag(self, ctx: FileContext, node: ast.AST) -> Finding:
+        return self.finding(
+            ctx, node,
+            "direct `.server.swap(...)` on a frontend-wrapped server "
+            "races the former/dispatcher threads (engine + cache state "
+            "mutate outside the front-end lock); call the locked "
+            "`ServeFrontend.swap(...)` instead")
