@@ -1,0 +1,256 @@
+"""Fused streaming select benchmark: tiled vs dense batched route.
+
+Both routes start from the SAME generator probs (G inference excluded —
+this bench isolates enumerate+score+select) on the high-dimension im2col
+space and must return bit-identical Selections:
+
+- **dense**: ``enumerate_candidates_batch`` materializes the
+  (T, C_pad, n_dims) candidate tensor (peak candidate memory linear in
+  the cap, host sync to pick C_pad), then ``select_batch`` walks it with
+  a vmapped sequential scan;
+- **fused**: ``fused_select_batch`` streams tile-sized candidate windows
+  through one jitted enumerate->score->select program (peak candidate
+  memory O(T * tile * d) at any cap).
+
+  PYTHONPATH=src python benchmarks/bench_select_fused.py [--quick]
+
+Gates, at the dense route's ceiling (cap 2**20):
+- fused >= --min-speedup x dense (default 2.0) with identical Selections;
+- the fused program's compiled temp footprint stays far below the dense
+  candidate tensor (the peak-memory assertion);
+- a cap-2**26 batch — 64x past the dense limit — completes, its compiled
+  temp footprint still tile-bounded (it cannot even be expressed on the
+  dense route).
+
+Also reports the measured per-task ``select`` host-vs-device crossover
+next to the configured ``selector.JAX_MIN_CANDIDATES``, and the
+throughput/peak-memory table at caps 2**14 / 2**20 / 2**26 that
+EXPERIMENTS.md quotes.  Appends to the ``BENCH_explore.json`` trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gan as G
+from repro.core.dse_api import GANDSE
+from repro.core.explorer import (ExplorerConfig, enumerate_candidates,
+                                 enumerate_candidates_batch)
+from repro.core.fused_select import fused_select_batch
+from repro.core.selector import (JAX_MIN_CANDIDATES, select, select_batch)
+from repro.dataset.generator import generate_dataset, generate_tasks
+from repro.design_models.im2col import Im2colModel
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+TRAJECTORY = os.environ.get("REPRO_BENCH_TRAJECTORY", "BENCH_explore.json")
+
+GATE_CAP = 1 << 20           # the dense route's ceiling: where the gate runs
+BIG_CAP = 1 << 26            # fused-only: 64x past the dense limit
+TILE = 1024
+BIG_TILE = 4096
+
+
+def build(quick: bool):
+    """Random-init G on the im2col space (12 groups, ~2.4e9 raw product:
+    threshold 0.01 employs every choice, so the trim fills any cap up to
+    2**26 and candidate counts land in (cap/2, cap])."""
+    model = Im2colModel()
+    layers, neurons = (1, 64) if quick else (2, 256)
+    cfg = G.GANConfig(n_net=model.net_space.n_dims).scaled(
+        layers=layers, neurons=neurons, batch_size=64)
+    g = GANDSE(model, cfg, ExplorerConfig(prob_threshold=0.01,
+                                          max_candidates=GATE_CAP))
+    ds = generate_dataset(model, 512, seed=0)
+    g.attach(ds, G.init_generator(jax.random.PRNGKey(3), cfg, model.space))
+    n_tasks = 4 if quick else 8
+    tasks = generate_tasks(model, n_tasks, seed=2)
+    probs = np.asarray(g._explorer.generator_probs_device(
+        tasks.net_idx, tasks.lat_obj, tasks.pow_obj, seed=0))
+    return model, tasks, probs
+
+
+def _same(a, b):
+    if a.n_candidates != b.n_candidates or a.satisfied != b.satisfied:
+        return False
+    if (a.cfg_idx is None) != (b.cfg_idx is None):
+        return False
+    if a.cfg_idx is None:
+        return True
+    return (np.array_equal(a.cfg_idx, b.cfg_idx)
+            and a.latency == b.latency and a.power == b.power)
+
+
+def _fused_temp_bytes(model, probs, cap, net, lo, po, tile) -> int:
+    """Compiled temp footprint of the (already built) fused program."""
+    run = model.__dict__["_fused_select"][tile]
+    compiled = run.lower(jnp.asarray(probs), jnp.float32(0.01),
+                         jnp.int32(cap), jnp.asarray(net, jnp.int32),
+                         jnp.asarray(lo, jnp.float32),
+                         jnp.asarray(po, jnp.float32)).compile()
+    return int(compiled.memory_analysis().temp_size_in_bytes)
+
+
+def _measure_crossover(model, tasks, probs, trials: int) -> Dict:
+    """Per-task `select` host-loop vs device-scan wall time over a
+    candidate-count grid; the measured cutover is reported next to the
+    configured selector.JAX_MIN_CANDIDATES."""
+    net = tasks.net_idx[0]
+    lo, po = float(tasks.lat_obj[0]), float(tasks.pow_obj[0])
+    grid, crossover = {}, None
+    for cap in (128, 256, 512, 1024, 2048):
+        cand = enumerate_candidates(model.space, probs[0], 0.01, cap)
+        best = {"host": float("inf"), "device": float("inf")}
+        select(model, net, cand, lo, po, use_jax=True)        # compile
+        for _ in range(trials + 1):
+            t0 = time.perf_counter()
+            select(model, net, cand, lo, po, use_jax=False)
+            best["host"] = min(best["host"], time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            select(model, net, cand, lo, po, use_jax=True)
+            best["device"] = min(best["device"], time.perf_counter() - t0)
+        grid[int(cand.shape[0])] = best
+        if crossover is None and best["device"] <= best["host"]:
+            crossover = int(cand.shape[0])
+    return {"grid": grid, "measured_crossover": crossover,
+            "configured_crossover": JAX_MIN_CANDIDATES}
+
+
+def run(quick: bool = False) -> Dict:
+    model, tasks, probs = build(quick)
+    n_tasks = int(tasks.net_idx.shape[0])
+    net = np.asarray(tasks.net_idx, np.int32)
+    lo = np.asarray(tasks.lat_obj, np.float64)
+    po = np.asarray(tasks.pow_obj, np.float64)
+    trials = 2 if quick else 3
+    d = model.space.n_dims
+    caps = {}
+
+    # ---- fused vs dense at 2**14 and at the dense ceiling 2**20 ----------
+    for cap in (1 << 14, GATE_CAP):
+        fused = fused_select_batch(model, net, probs, 0.01, cap, lo, po,
+                                   tile=TILE)                 # warm + compile
+        cand, valid, counts = enumerate_candidates_batch(
+            model.space, probs, 0.01, cap)
+        dense = select_batch(model, net, cand, valid, counts, lo, po)
+        assert all(_same(f, x) for f, x in zip(fused, dense)), \
+            f"fused != dense Selections at cap {cap}"
+        assert min(counts) > cap // 2, f"scale check failed at cap {cap}"
+
+        best = {"fused": float("inf"), "dense": float("inf")}
+        for _ in range(trials):                  # interleaved: noise-robust
+            t0 = time.perf_counter()
+            fused_select_batch(model, net, probs, 0.01, cap, lo, po,
+                               tile=TILE)
+            best["fused"] = min(best["fused"], time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            c, v, nc = enumerate_candidates_batch(model.space, probs, 0.01,
+                                                  cap)
+            select_batch(model, net, c, v, nc, lo, po)
+            best["dense"] = min(best["dense"], time.perf_counter() - t0)
+
+        c_pad = int(cand.shape[1])
+        caps[cap] = {
+            "fused_s": best["fused"],
+            "dense_s": best["dense"],
+            "speedup": best["dense"] / best["fused"],
+            "n_candidates_min": int(min(counts)),
+            "dense_cand_bytes": n_tasks * c_pad * d * 4,
+            "fused_cand_bytes": n_tasks * TILE * d * 4,
+            "fused_temp_bytes": _fused_temp_bytes(
+                model, probs, cap, net, lo, po, TILE),
+        }
+        print(f"[select_fused] T={n_tasks} cap=2^{cap.bit_length()-1} "
+              f"dense={best['dense']*1e3:.1f}ms "
+              f"fused={best['fused']*1e3:.1f}ms "
+              f"({caps[cap]['speedup']:.1f}x) "
+              f"cand_bytes dense={caps[cap]['dense_cand_bytes']:.3g} "
+              f"fused={caps[cap]['fused_cand_bytes']:.3g}", flush=True)
+
+    gate = caps[GATE_CAP]
+    # peak-memory assertion: the fused program's entire compiled temp
+    # footprint (all live buffers, not just candidates) stays well under
+    # the dense route's candidate tensor alone
+    assert gate["fused_temp_bytes"] * 4 < gate["dense_cand_bytes"], \
+        (gate["fused_temp_bytes"], gate["dense_cand_bytes"])
+
+    # ---- 2**26: 64x past the dense limit, fused-only ----------------------
+    big_tasks = 2 if quick else 4
+    sels = fused_select_batch(model, net[:big_tasks], probs[:big_tasks], 0.01,
+                              BIG_CAP, lo[:big_tasks], po[:big_tasks],
+                              tile=BIG_TILE)                  # warm + compile
+    t0 = time.perf_counter()
+    fused_select_batch(model, net[:big_tasks], probs[:big_tasks], 0.01,
+                       BIG_CAP, lo[:big_tasks], po[:big_tasks], tile=BIG_TILE)
+    big_s = time.perf_counter() - t0
+    big_min = min(s.n_candidates for s in sels)
+    assert big_min > BIG_CAP // 2 and all(s.cfg_idx is not None for s in sels)
+    big_temp = _fused_temp_bytes(model, probs[:big_tasks], BIG_CAP,
+                                 net[:big_tasks], lo[:big_tasks],
+                                 po[:big_tasks], BIG_TILE)
+    big_dense_equiv = big_tasks * BIG_CAP * d * 4   # what dense would need
+    assert big_temp * 64 < big_dense_equiv, (big_temp, big_dense_equiv)
+    print(f"[select_fused] cap=2^26 T={big_tasks} cands>={big_min} "
+          f"fused={big_s:.2f}s temp={big_temp:.3g}B "
+          f"(dense would need {big_dense_equiv:.3g}B)", flush=True)
+
+    crossover = _measure_crossover(model, tasks, probs, trials)
+    print(f"[select_fused] select() crossover: measured="
+          f"{crossover['measured_crossover']} configured="
+          f"{crossover['configured_crossover']}", flush=True)
+
+    out = {
+        "bench": "select_fused",
+        "n_tasks": n_tasks,
+        "tile": TILE,
+        "big_tile": BIG_TILE,
+        "caps": {str(k): v for k, v in caps.items()},
+        "speedup": gate["speedup"],
+        "big_cap": BIG_CAP,
+        "big_tasks": big_tasks,
+        "big_s": big_s,
+        "big_candidates_min": int(big_min),
+        "big_temp_bytes": big_temp,
+        "crossover": crossover,
+        "quick": quick,
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "select_fused.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    traj = []
+    if os.path.exists(TRAJECTORY):
+        with open(TRAJECTORY) as f:
+            traj = json.load(f)
+    traj.append(out)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(traj, f, indent=1)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale: 4 tasks, 2 trials, 2-task 2^26 run")
+    ap.add_argument("--min-speedup", type=float, default=2.0,
+                    help="fail below this fused-vs-dense ratio at cap 2^20; "
+                         "use a looser bound on noisy shared runners")
+    args = ap.parse_args(argv)
+    out = run(quick=args.quick)
+    if out["speedup"] < args.min_speedup:
+        print(f"FAIL: fused select only {out['speedup']:.2f}x the dense "
+              f"route at cap 2^20 (< {args.min_speedup:g}x bar)")
+        return 1
+    print(f"ok: fused select {out['speedup']:.1f}x dense at cap 2^20 "
+          f"(>= {args.min_speedup:g}x bar), 2^26 completes in "
+          f"{out['big_s']:.2f}s within the tile-memory envelope")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -29,6 +29,7 @@ from repro.core import shard
 from repro.core.explorer import (ExplorerConfig, enumerate_candidates,
                                  enumerate_candidates_batch,
                                  flatten_task_draws, task_keys)
+from repro.core.fused_select import fused_select_batch
 from repro.core.selector import select, select_batch
 from repro.core.dse_api import DSEResult, row_seeds
 from repro.core.train import encode_batch
@@ -206,9 +207,10 @@ class LargeMLP:
 
     def explore_batch(self, tasks: DSETask, seed: int = 0) -> List[DSEResult]:
         """Batched device-resident exploration, same structure (and parity
-        contract) as ``GANDSE.explore_batch``: vmapped forward -> on-device
-        candidate enumeration -> batched Algorithm 2.  dse_seconds is the
-        amortized per-task wall-clock."""
+        contract) as ``GANDSE.explore_batch``: vmapped forward -> fused
+        streaming enumerate/score/select (``batch_route="dense"`` on the
+        explorer config keeps the reference materialized route).
+        dse_seconds is the amortized per-task wall-clock."""
         n_tasks = int(tasks.net_idx.shape[0])
         if n_tasks == 0:
             return []
@@ -221,11 +223,19 @@ class LargeMLP:
         tasks_p, seeds, n_real = shard.pad_tasks(tasks, seeds)
         probs = self.generator_probs_device(tasks_p.net_idx, tasks_p.lat_obj,
                                             tasks_p.pow_obj, seeds)
-        cand, valid, counts = enumerate_candidates_batch(
-            self.model.space, probs, self.explorer_cfg.prob_threshold,
-            self.explorer_cfg.max_candidates)
-        sels = select_batch(self.model, tasks_p.net_idx, cand, valid, counts,
-                            tasks_p.lat_obj, tasks_p.pow_obj)
+        if self.explorer_cfg.batch_route == "dense":
+            cand, valid, counts = enumerate_candidates_batch(
+                self.model.space, probs, self.explorer_cfg.prob_threshold,
+                self.explorer_cfg.max_candidates)
+            sels = select_batch(self.model, tasks_p.net_idx, cand, valid,
+                                counts, tasks_p.lat_obj, tasks_p.pow_obj)
+        else:
+            sels = fused_select_batch(
+                self.model, tasks_p.net_idx, probs,
+                self.explorer_cfg.prob_threshold,
+                self.explorer_cfg.max_candidates,
+                tasks_p.lat_obj, tasks_p.pow_obj,
+                tile=self.explorer_cfg.select_tile)
         per_task = (time.time() - t0) / n_real
         return [
             DSEResult(sel, float(tasks.lat_obj[i]), float(tasks.pow_obj[i]),

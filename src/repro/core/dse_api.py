@@ -22,6 +22,7 @@ from repro.core import shard
 from repro.core.explorer import Explorer, ExplorerConfig, row_seeds  # noqa: F401
 # (row_seeds re-exported: the per-row seed convention lives next to
 # task_keys so the device and host routes cannot drift apart)
+from repro.core.fused_select import fused_select_batch
 from repro.core.selector import Selection, select, select_batch
 from repro.core.train import TrainState, train_gan
 from repro.dataset.generator import Dataset, DSETask, generate_dataset
@@ -176,8 +177,13 @@ class GANDSE:
     def explore_batch(self, tasks: DSETask,
                       seed: SeedLike = 0) -> List[DSEResult]:
         """Batched device-resident exploration: vmapped G inference ->
-        on-device candidate enumeration -> batched Algorithm 2, one dispatch
-        chain for the whole task batch.  Task i returns the same Selection
+        fused streaming enumerate/score/select (``core/fused_select``) —
+        one uninterrupted device program for the whole task batch, with
+        zero mid-dispatch host syncs and candidate caps up to 2**26.
+        ``ExplorerConfig.batch_route="dense"`` keeps the reference route
+        (materialized candidate tensor + vmapped scan, caps to 2**20);
+        Selections are bit-identical either way.  Task i returns the same
+        Selection
         as ``explore(tasks.net_idx[i], ..., seed=seed + i)`` — or
         ``seed=seed[i]`` when ``seed`` is a (T,) per-task array — identical
         candidate sets always; the winner too, except when `explore` routes
@@ -205,10 +211,21 @@ class GANDSE:
         t0 = time.time()
         seeds = row_seeds(seed, n_tasks)
         tasks_p, seeds, n_real = shard.pad_tasks(tasks, seeds)
-        cand, valid, counts = self._explorer.candidates_batch(
-            tasks_p.net_idx, tasks_p.lat_obj, tasks_p.pow_obj, seed=seeds)
-        sels = select_batch(self.model, tasks_p.net_idx, cand, valid, counts,
-                            tasks_p.lat_obj, tasks_p.pow_obj)
+        if self.explorer_cfg.batch_route == "dense":
+            # reference route: materialized candidate tensor + vmapped scan
+            cand, valid, counts = self._explorer.candidates_batch(
+                tasks_p.net_idx, tasks_p.lat_obj, tasks_p.pow_obj, seed=seeds)
+            sels = select_batch(self.model, tasks_p.net_idx, cand, valid,
+                                counts, tasks_p.lat_obj, tasks_p.pow_obj)
+        else:
+            probs = self._explorer.generator_probs_device(
+                tasks_p.net_idx, tasks_p.lat_obj, tasks_p.pow_obj, seed=seeds)
+            sels = fused_select_batch(
+                self.model, tasks_p.net_idx, probs,
+                self.explorer_cfg.prob_threshold,
+                self.explorer_cfg.max_candidates,
+                tasks_p.lat_obj, tasks_p.pow_obj,
+                tile=self.explorer_cfg.select_tile)
         per_task = (time.time() - t0) / n_real
         return [
             DSEResult(sel, float(tasks.lat_obj[i]), float(tasks.pow_obj[i]),

@@ -18,6 +18,13 @@ Two routes produce identical candidate sets:
   unravels the cartesian product directly into a ``(T, C_pad, n_dims)``
   padded candidate tensor, with ``C_pad`` bucketed to the next power of two
   so the jit cache stays bounded.
+
+A third route consumes the same enumeration *without* the dense tensor:
+``core/fused_select`` applies the identical mixed-radix arithmetic to
+tile-sized index windows inside one fused enumerate->score->select
+program, which is how caps beyond the dense materialization bound
+(``_DENSE_LIM``) up to ``_PROD_LIM = 2**26`` are reached.  Both routes
+share the traceable cores in ``_enum_core`` so they cannot drift.
 """
 from __future__ import annotations
 
@@ -42,6 +49,14 @@ class ExplorerConfig:
     prob_threshold: float = 0.2
     max_candidates: int = 4096
     noise_samples: int = 1     # forward passes with independent noise
+    #: batched-route selection: "fused" streams candidate tiles through one
+    #: enumerate->score->select program (caps up to _PROD_LIM = 2**26);
+    #: "dense" keeps the reference route that materializes the (T, C_pad,
+    #: n_dims) tensor (caps up to _DENSE_LIM = 2**20).  Selections are
+    #: bit-identical either way (tests/test_fused_select.py).
+    batch_route: str = "fused"
+    #: fused tile width — peak candidate memory is O(T * select_tile * d)
+    select_tile: int = 1024
 
 
 # canonical definition lives beside the padding helpers it feeds;
@@ -149,36 +164,51 @@ def enumerate_candidates(
 # ---------------------------------------------------------------------------
 # device-resident batched enumeration
 # ---------------------------------------------------------------------------
-#: largest max_candidates the batch route accepts (asserted at entry).
+#: largest max_candidates any batched route accepts (asserted at entry).
 #: Running cartesian-product values are clamped to _PROD_CLAMP during the
 #: on-device trim: strictly above any permitted cap, so a clamped value
-#: still compares `> cap` correctly, while partial products stay exact
-#: int32 (clamp * max group size 1024 < 2**31).
-_PROD_LIM = 1 << 20
+#: still compares `> cap` correctly.  The divide-form overflow guard in
+#: ``_clamped_product`` keeps every partial product exact int32 at this
+#: cap (the old multiply-then-min form needed clamp * 1024 < 2**31 and
+#: topped out at 2**20).
+_PROD_LIM = 1 << 26
 _PROD_CLAMP = _PROD_LIM + 1
+#: largest cap the *dense* route will materialize as a (T, C_pad, n_dims)
+#: tensor; beyond it, only the streaming tiled route (core/fused_select)
+#: applies — it never materializes more than a tile.
+_DENSE_LIM = 1 << 20
 
 
 @functools.lru_cache(maxsize=None)
-def _batched_enum_fns(space: ConfigSpace):
-    """Jitted (masks, unravel) pair for on-device candidate enumeration.
+def _enum_core(space: ConfigSpace):
+    """Traceable enumeration cores shared by the dense jitted wrappers
+    (``_batched_enum_fns``) and the streaming tiled route
+    (``core/fused_select``).
 
-    ``masks``: probs (T, onehot_width) -> per-group keep masks + counts +
-    totals, applying the same threshold/argmax/trim rules as the host
-    ``enumerate_candidates`` (bit-for-bit: same probs in -> same sets out).
-    ``unravel``: mixed-radix index arithmetic turning the kept sets into the
-    (T, c_pad, n_dims) padded candidate tensor — ``c_pad`` is static so the
-    jit cache holds one entry per power-of-two bucket.
+    ``masks_core``: probs (T, onehot_width) -> per-group keep masks +
+    counts + totals, applying the same threshold/argmax/trim rules as the
+    host ``enumerate_candidates`` (bit-for-bit: same probs in -> same sets
+    out).  ``radix_core``: the kept sets -> the mixed-radix (table, stride)
+    pair whose digit arithmetic unravels the cartesian product in
+    ``itertools.product`` order.  One definition feeds both consumers, so
+    the routes cannot drift.
     """
     gidx, mask, _ = padded_group_layout(space)
     n_groups, mx = mask.shape
     mask_j = jnp.asarray(mask)
 
     def _clamped_product(counts):
-        # python loop over the (static, small) group count; clamping keeps
-        # every partial product < 2**31 while preserving `> cap` comparisons
+        # python loop over the (static, small) group count.  The guard is
+        # divide-form so the product is only computed when it stays below
+        # the clamp (exact for positive ints: p*c > clamp <=> p > clamp//c)
+        # — no partial product ever exceeds _PROD_CLAMP < 2**31, at any
+        # permitted cap.  The wrapped multiply in the rejected lane of the
+        # `where` is discarded, never selected.
         p = jnp.int32(1)
         for g in range(n_groups):
-            p = jnp.minimum(p * counts[g], _PROD_CLAMP)
+            c = counts[g]
+            over = p > _PROD_CLAMP // c
+            p = jnp.where(over, jnp.int32(_PROD_CLAMP), p * c)
         return p
 
     def _masks_one(probs_pad, thresh, cap):
@@ -200,21 +230,39 @@ def _batched_enum_fns(space: ConfigSpace):
             .reshape(n_groups, mx)
         return keep, counts
 
-    @jax.jit
-    def masks(probs, thresh, cap):
+    def masks_core(probs, thresh, cap):
         padded, _ = space.split_groups_padded(probs, fill=-jnp.inf)
         keep, counts = jax.vmap(_masks_one, in_axes=(0, None, None))(
             padded, thresh, cap)
         total = jnp.prod(counts, axis=-1)    # <= cap after trim: int32-safe
         return keep, counts, total
 
-    @functools.partial(jax.jit, static_argnames="c_pad")
-    def unravel(keep, counts, total, c_pad):
+    def radix_core(keep, counts):
         table = jnp.argsort(~keep, axis=-1)  # kept slots first, ascending
         # row-major strides (last group fastest — itertools.product order)
         rev = jnp.cumprod(counts[:, ::-1], axis=-1)[:, ::-1]
         stride = jnp.concatenate([rev[:, 1:], jnp.ones_like(rev[:, :1])],
                                  axis=-1)
+        return table, stride
+
+    return masks_core, radix_core
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_enum_fns(space: ConfigSpace):
+    """Jitted (masks, unravel) pair for the dense on-device enumeration.
+
+    Thin jit wrappers over ``_enum_core``: ``unravel`` applies the mixed
+    -radix digit arithmetic to the full [0, c_pad) index range, yielding
+    the (T, c_pad, n_dims) padded candidate tensor — ``c_pad`` is static
+    so the jit cache holds one entry per power-of-two bucket.
+    """
+    masks_core, radix_core = _enum_core(space)
+    masks = jax.jit(masks_core)
+
+    @functools.partial(jax.jit, static_argnames="c_pad")
+    def unravel(keep, counts, total, c_pad):
+        table, stride = radix_core(keep, counts)
         j = jnp.arange(c_pad, dtype=jnp.int32)
         digit = (j[None, :, None] // stride[:, None, :]) % counts[:, None, :]
         cand = jnp.take_along_axis(table, digit.transpose(0, 2, 1), axis=-1)
@@ -240,9 +288,16 @@ def enumerate_candidates_batch(
     Row t's first counts[t] candidates equal ``enumerate_candidates`` on
     probs[t] exactly.  C_pad is the next power of two >= max(counts),
     bucketing recompiles to at most log2(max_candidates) cache entries.
+
+    This is the *reference* route: picking C_pad costs a mid-dispatch host
+    sync (the ``np.asarray(total)`` below — the GL112 bug class) and the
+    tensor caps out at ``_DENSE_LIM``.  The production batched path
+    (``core/fused_select``) streams the same enumeration in tiles with
+    neither limit.
     """
-    assert space.max_group_size <= 1024 and 1 <= max_candidates <= _PROD_LIM, \
-        "on-device trim needs max group size <= 1024 and cap <= 2**20"
+    assert space.max_group_size <= 1024 and 1 <= max_candidates <= _DENSE_LIM, \
+        "dense route needs max group size <= 1024 and cap <= 2**20 " \
+        "(use the fused tiled route for larger caps)"
     masks, unravel = _batched_enum_fns(space)
     keep, counts, total = masks(shard.put_sharded(probs), jnp.float32(thresh),
                                 jnp.int32(max_candidates))

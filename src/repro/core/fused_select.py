@@ -1,0 +1,256 @@
+"""Streaming tiled select: enumerate -> score -> select as ONE program.
+
+The dense batched route (``enumerate_candidates_batch`` + ``select_batch``)
+materializes every candidate as a (T, C_pad, n_dims) tensor and walks it
+with a sequential length-C_pad Algorithm-2 scan: memory and latency both
+scale linearly with the candidate cap, a mid-dispatch host sync picks
+C_pad, and the cap tops out at the dense materialization bound
+(``explorer._DENSE_LIM`` = 2**20).
+
+This module fuses the three stages into one jitted program that loops
+over fixed-size candidate *tiles*:
+
+- each tile step decodes its tile-sized index window by *incremental*
+  mixed-radix arithmetic: the in-tile offset digits are divmod-decoded
+  once per call (the dense route's ``unravel``, via the shared
+  ``explorer._enum_core`` radices) and every tile adds them to the
+  running tile-base digits with a carry-propagating compare/subtract —
+  zero integer divisions inside the loop (runtime-divisor divmod over
+  (T, tile, n_dims) was ~half the route's wall time) and the full
+  tensor is never materialized, so peak candidate memory is
+  O(T * tile * n_dims) at ANY cap;
+- the jnp oracle scores the tile;
+- an exact fast-forward of the Algorithm-2 update chain folds the tile
+  into the running per-task winner.
+
+Exactness.  Algorithm 2's update chain is path-dependent — whether a row
+is accepted depends on the (L_opt, P_opt) carry it meets, so no
+carry-independent per-tile argmin/total-order reduction can match the
+sequential chain.  Instead the *accept test itself* is vectorized: under
+a fixed carry, the chain's next accepted row is simply the first row
+whose update predicate holds, so a while-loop of [mask -> jump to first
+set bit -> reload carry] replays the sequential chain bit-exactly —
+including first-wins tie order — in O(accepted rows) vectorized passes
+instead of O(tile) scalar steps.  Accepted rows are rare (each must
+improve on the last; measured 1-3 per task over ~900 tiles at cap
+2**20), and the accept mask under a fixed carry is cheap to build
+row-vectorized — the chain's case split (init/both/sc2/sc3) depends
+only on per-task scalars, so the mask is a handful of broadcast
+compares that XLA fuses straight into the oracle chain.  The tile step
+therefore computes that exact mask once and a ``lax.cond`` runs the
+replay loop ONLY on tiles that provably accept a row: the common-tile
+cost is one fused mask reduction, no loop machinery.
+
+The tile-loop trip count is ceil(max(total) / tile) computed ON DEVICE —
+no ``np.asarray`` mid-dispatch (the GL112 bug class), no recompile (the
+program is static in everything but the task-bucket shape), and no
+wasted tiles when candidate sets are far below the cap.  Warm serve
+dispatch is one uninterrupted device program.
+
+Selections are bit-identical to the dense and host routes (pinned by
+``tests/test_fused_select.py``): identical float32 update-chain compares
+on identical oracle values, and winner metrics re-derived from the
+float64 host oracle through the same ``selections_from_winners`` tail as
+``select_batch``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import shard
+from repro.core.encoding import ConfigSpace
+from repro.core.explorer import _PROD_LIM, _enum_core
+from repro.core.selector import NOISE_TOL, Selection, selections_from_winners
+from repro.design_models.base import DesignModel
+
+#: default tile width — peak candidate memory is O(T * tile * n_dims)
+#: regardless of max_candidates, which is how caps up to _PROD_LIM = 2**26
+#: fit where the dense route stops at 2**20
+FUSED_TILE = 1024
+
+
+def _fused_batch(model: DesignModel, space: ConfigSpace, tile: int):
+    """Build the jitted enumerate->score->select program for one
+    (model, tile); cached on the model by `fused_select_batch` the way
+    selector caches ``_alg2_batch``."""
+    masks_core, radix_core = _enum_core(space)
+    rows = jnp.arange(tile, dtype=jnp.int32)
+    n_dims = space.n_dims
+
+    def radix_add(base, add, counts):
+        # mixed-radix add with the last dim least significant (itertools
+        # .product order, same radices as `unravel`); both addends are
+        # digit-wise < counts so the ripple carry is at most 1, and the
+        # dropped carry-out wraps mod prod(counts) exactly like the
+        # divmod form does for indices past the raw product
+        digits = []
+        carry = jnp.zeros(jnp.broadcast_shapes(base.shape[:-1],
+                                               add.shape[:-1]), jnp.int32)
+        for d in range(n_dims - 1, -1, -1):
+            s = base[..., d] + add[..., d] + carry
+            carry = (s >= counts[..., d]).astype(jnp.int32)
+            digits.append(s - carry * counts[..., d])
+        return jnp.stack(digits[::-1], axis=-1)
+
+    def fold_tile(lo, po, lat, pw, valid, j0, l_opt, p_opt, chosen):
+        # exact Algorithm-2 fold of one task's tile (see module docstring):
+        # under a fixed carry the accept mask is the update predicate of
+        # selector._algorithm2_core, row-vectorized; the first set bit at
+        # or after `pos` is the next row the sequential chain accepts.
+        fin = jnp.isfinite(lat) & jnp.isfinite(pw) & valid
+
+        def accept(l_opt, p_opt, pos):
+            init = (l_opt == 0.0) & (p_opt == 0.0)
+            both = ((l_opt > lo) & (p_opt > po)) | ((l_opt < lo) & (p_opt < po))
+            sc2 = (l_opt > lo) & (p_opt < po)
+            sc3 = (p_opt > po) & (l_opt < lo)
+            upd = fin & (
+                init
+                | (~init & both & (lat < l_opt) & (pw < p_opt))
+                | (~init & ~both & sc2 & (lat < l_opt) & (pw < po))
+                | (~init & ~both & ~sc2 & sc3 & (pw < p_opt) & (lat < lo))
+            )
+            return upd & (rows >= pos)
+
+        def cond(state):
+            l_opt, p_opt, _chosen, pos = state
+            return jnp.any(accept(l_opt, p_opt, pos))
+
+        def body(state):
+            l_opt, p_opt, chosen, pos = state
+            i = jnp.argmax(accept(l_opt, p_opt, pos)).astype(jnp.int32)
+            return lat[i], pw[i], j0 + i, i + jnp.int32(1)
+
+        l_opt, p_opt, chosen, _ = jax.lax.while_loop(
+            cond, body, (l_opt, p_opt, chosen, jnp.int32(0)))
+        return l_opt, p_opt, chosen
+
+    def run(probs, thresh, cap, net_idx, lo, po):
+        keep, counts, total = masks_core(probs, thresh, cap)
+        table, stride = radix_core(keep, counts)
+        n_tiles = (jnp.max(total) + (tile - 1)) // tile   # device: no sync
+        # the ONLY divmod decodes, once per call: in-tile offset digits
+        # (T, tile, n_dims) and the per-tile-step digit increment (T, n_dims)
+        off_dig = (rows[None, :, None] // stride[:, None, :]) \
+            % counts[:, None, :]
+        step_dig = (jnp.int32(tile) // stride) % counts
+
+        def decode_and_score(base_dig):
+            # the dense `unravel` digit arithmetic on a tile-sized window,
+            # via divmod-free incremental add of the tile-base digits
+            digit = radix_add(base_dig[:, None, :], off_dig,
+                              counts[:, None, :])
+            cand = jnp.take_along_axis(table, digit.transpose(0, 2, 1),
+                                       axis=-1).transpose(0, 2, 1) \
+                .astype(jnp.int32)
+            lat, pw = model.evaluate_jax_indices(net_idx[:, None, :], cand)
+            return lat.astype(jnp.float32), pw.astype(jnp.float32)
+
+        def tile_step(k, carry):
+            l_opt, p_opt, chosen, base_dig = carry
+            j0 = (k * tile).astype(jnp.int32)
+            valid = (j0 + rows)[None, :] < total[:, None]
+            latf, pwf = decode_and_score(base_dig)
+            # the EXACT accept mask of the update chain under the incoming
+            # carry (== fold_tile's first while cond): the case split is
+            # per-task scalars, only the metric compares are per-row, so
+            # this fuses into one decode->oracle->mask reduction — the
+            # replay runs only on tiles that provably accept a row (1-3
+            # per task per run)
+            fin = jnp.isfinite(latf) & jnp.isfinite(pwf) & valid
+            init = (l_opt == 0.0) & (p_opt == 0.0)
+            both = ((l_opt > lo) & (p_opt > po)) | ((l_opt < lo) & (p_opt < po))
+            sc2 = (l_opt > lo) & (p_opt < po)
+            sc3 = (p_opt > po) & (l_opt < lo)
+            lt_l = latf < l_opt[:, None]
+            lt_p = pwf < p_opt[:, None]
+            upd = fin & (
+                init[:, None]
+                | ((~init & both)[:, None] & lt_l & lt_p)
+                | ((~init & ~both & sc2)[:, None] & lt_l
+                   & (pwf < po[:, None]))
+                | ((~init & ~both & ~sc2 & sc3)[:, None] & lt_p
+                   & (latf < lo[:, None])))
+
+            def replay(c):
+                # recompute the tile INSIDE the rare branch: handing latf/
+                # pwf to lax.cond as operands would force them (and the
+                # whole f64 oracle chain) to materialize every tile,
+                # breaking the common path's single fusion — recomputing
+                # from the (T, n_dims) carry digits keeps the cond's
+                # operands tiny and costs one extra oracle pass on the
+                # handful of accepting tiles
+                lat2, pw2 = decode_and_score(base_dig)
+                return jax.vmap(
+                    fold_tile, in_axes=(0, 0, 0, 0, 0, None, 0, 0, 0))(
+                    lo, po, lat2, pw2, valid, j0, *c)
+
+            l_opt, p_opt, chosen = jax.lax.cond(
+                jnp.any(upd), replay, lambda c: c, (l_opt, p_opt, chosen))
+            return l_opt, p_opt, chosen, radix_add(base_dig, step_dig,
+                                                   counts)
+
+        t = probs.shape[0]
+        carry0 = (jnp.zeros(t, jnp.float32), jnp.zeros(t, jnp.float32),
+                  jnp.full((t,), -1, jnp.int32),
+                  jnp.zeros((t, space.n_dims), jnp.int32))
+        _, _, chosen, _ = jax.lax.fori_loop(0, n_tiles, tile_step, carry0)
+        # winner configs from the same mixed radix; rows with chosen < 0
+        # yield arbitrary values here and are masked by the host tail
+        jw = jnp.maximum(chosen, 0)[:, None]
+        digit_w = (jw // stride) % counts
+        win = jnp.take_along_axis(table, digit_w[:, :, None], axis=-1)[..., 0]
+        return chosen, win.astype(jnp.int32), total
+
+    return jax.jit(run)
+
+
+def fused_select_batch(
+    model: DesignModel,
+    net_idx: np.ndarray,
+    probs,
+    thresh: float,
+    max_candidates: int,
+    lat_obj,
+    pow_obj,
+    noise_tol: float = NOISE_TOL,
+    tile: int = FUSED_TILE,
+) -> List[Selection]:
+    """Batched Algorithm 2 straight from generator probs, streaming tiles.
+
+    net_idx (T, n_net_dims), probs (T, onehot_width) (host or device, as
+    produced by ``Explorer.generator_probs_device``), objectives (T,).
+    Requires a jnp oracle (``model.has_jax_oracle``).  Task t's Selection
+    is bit-identical to the dense route's (``enumerate_candidates_batch``
+    + ``select_batch``) and to the host route's, at any tile size.
+
+    Under an active task mesh (``shard.set_task_mesh``) with T a multiple
+    of the shard count, the inputs land task-sharded and the one fused
+    program partitions across devices; the tile axis is never sharded, so
+    lane numerics — and winners — are unchanged (the max(total) tile
+    bound becomes a deterministic all-reduce).
+    """
+    assert model.has_jax_oracle, "fused route needs a jnp oracle"
+    assert model.space.max_group_size <= 1024 and \
+        1 <= max_candidates <= _PROD_LIM, \
+        "fused route needs max group size <= 1024 and cap <= 2**26"
+    assert tile >= 1
+    cache = model.__dict__.setdefault("_fused_select", {})
+    run = cache.get(tile)
+    if run is None:
+        run = cache[tile] = _fused_batch(model, model.space, tile)
+    net_idx = np.asarray(net_idx, np.int32)
+    lo = np.asarray(lat_obj, np.float64).reshape(-1)
+    po = np.asarray(pow_obj, np.float64).reshape(-1)
+    chosen, win_cfg, total = run(
+        shard.put_sharded(probs), jnp.float32(thresh),
+        jnp.int32(max_candidates), shard.put_sharded(net_idx),
+        shard.put_sharded(lo.astype(np.float32)),
+        shard.put_sharded(po.astype(np.float32)),
+    )
+    return selections_from_winners(model, net_idx, chosen, win_cfg,
+                                   np.asarray(total), lo, po, noise_tol)

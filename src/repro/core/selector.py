@@ -66,8 +66,31 @@ def is_satisfied(lat: float, pw: float, lo: float, po: float,
 
 
 #: auto-route cutover: below this candidate count the host numpy loop is
-#: faster than dispatching the jitted scan (see `select` docstring)
-_JAX_MIN_CANDIDATES = 512
+#: faster than dispatching the jitted scan (see `select` docstring).
+#: `benchmarks/bench_select_fused.py` reports the crossover it measures on
+#: the current host next to this configured value.
+JAX_MIN_CANDIDATES = 512
+#: historical private name (pre-dating the `--select-route` override)
+_JAX_MIN_CANDIDATES = JAX_MIN_CANDIDATES
+
+#: process-wide `select` route override: None = auto (candidate-count
+#: crossover), False = force the host loop, True = force the device scan.
+#: Set via `set_select_route` (the `--select-route` launcher flag).
+_SELECT_ROUTE: Optional[bool] = None
+
+_ROUTE_NAMES = {"auto": None, "host": False, "device": True}
+
+
+def set_select_route(route: str) -> None:
+    """Override the per-task `select` auto-route: "auto" restores the
+    JAX_MIN_CANDIDATES crossover, "host" forces the float64 numpy loop,
+    "device" forces the jitted scan (models without a jnp oracle still
+    fall back to host).  Explicit ``use_jax=`` arguments always win."""
+    global _SELECT_ROUTE
+    if route not in _ROUTE_NAMES:
+        raise ValueError(f"select route must be one of {sorted(_ROUTE_NAMES)},"
+                         f" got {route!r}")
+    _SELECT_ROUTE = _ROUTE_NAMES[route]
 
 
 def _algorithm2_core(model: DesignModel):
@@ -185,8 +208,11 @@ def select(
     if cand_idx.size == 0:
         return Selection(None, np.inf, np.inf, False, 0)
     if use_jax is None:
-        use_jax = (model.has_jax_oracle
-                   and cand_idx.shape[0] >= _JAX_MIN_CANDIDATES)
+        if _SELECT_ROUTE is None:
+            use_jax = (model.has_jax_oracle
+                       and cand_idx.shape[0] >= JAX_MIN_CANDIDATES)
+        else:       # --select-route override (see set_select_route)
+            use_jax = _SELECT_ROUTE and model.has_jax_oracle
     if use_jax:
         return _select_jax(model, net_idx, cand_idx, lat_obj, pow_obj, noise_tol)
     net = np.repeat(np.atleast_2d(net_idx), cand_idx.shape[0], axis=0)
@@ -223,6 +249,45 @@ def select(
         satisfied=satisfied,
         n_candidates=int(cand_idx.shape[0]),
     )
+
+
+def selections_from_winners(
+    model: DesignModel,
+    net_idx: np.ndarray,
+    chosen,
+    win_cfg,
+    n_candidates,
+    lat_obj,
+    pow_obj,
+    noise_tol: float = NOISE_TOL,
+) -> List[Selection]:
+    """Shared host tail of the batched device routes (`select_batch` and
+    the fused tiled route, ``core/fused_select``): given each task's
+    chosen candidate rank (-1 = none feasible) and winner config rows,
+    one batched float64 host-oracle call re-derives the reported metrics
+    — the device float32 only steered the update chains.  Rows with
+    ``chosen[t] < 0`` may hold arbitrary ``win_cfg`` values; they are
+    never evaluated."""
+    chosen = np.asarray(chosen)
+    win = np.asarray(win_cfg)
+    net_idx = np.asarray(net_idx, np.int32)
+    lo = np.asarray(lat_obj, np.float64).reshape(-1)
+    po = np.asarray(pow_obj, np.float64).reshape(-1)
+    has = chosen >= 0
+    if has.any():       # one float64 host-oracle call for every winner
+        lat64, pw64 = model.evaluate_indices(net_idx[has], win[has])
+
+    out, k = [], 0
+    for t in range(chosen.shape[0]):
+        n = int(n_candidates[t])
+        if not has[t]:
+            out.append(Selection(None, np.inf, np.inf, False, n))
+            continue
+        l_opt, p_opt = float(lat64[k]), float(pw64[k])
+        k += 1
+        satisfied = is_satisfied(l_opt, p_opt, lo[t], po[t], noise_tol)
+        out.append(Selection(win[t].copy(), l_opt, p_opt, satisfied, n))
+    return out
 
 
 def select_batch(
@@ -267,20 +332,6 @@ def select_batch(
     )
     chosen = np.asarray(chosen)
     cand_host = np.asarray(cand_idx)
-    has = chosen >= 0
-    if has.any():       # one float64 host-oracle call for every winner
-        win_cfg = cand_host[np.flatnonzero(has), chosen[has]]
-        lat64, pw64 = model.evaluate_indices(net_idx[has], win_cfg)
-
-    out, k = [], 0
-    for t in range(n_tasks):
-        n = int(n_candidates[t])
-        if not has[t]:
-            out.append(Selection(None, np.inf, np.inf, False, n))
-            continue
-        l_opt, p_opt = float(lat64[k]), float(pw64[k])
-        k += 1
-        satisfied = is_satisfied(l_opt, p_opt, lo[t], po[t], noise_tol)
-        out.append(Selection(cand_host[t, chosen[t]].copy(), l_opt, p_opt,
-                             satisfied, n))
-    return out
+    win_cfg = cand_host[np.arange(n_tasks), np.maximum(chosen, 0)]
+    return selections_from_winners(model, net_idx, chosen, win_cfg,
+                                   n_candidates, lo, po, noise_tol)

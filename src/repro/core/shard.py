@@ -26,6 +26,13 @@ Mechanics, shared by every route:
    over the mesh's batch axes — so jit partitions the existing vmapped
    program across devices instead of recompiling anything new.
 
+The fused streaming select (``core/fused_select``) keeps the same
+invariant: ONLY the task axis shards.  Its candidate-tile axis is a
+device-local loop dimension — every lane walks its own tiles — and the
+one cross-lane value, the max(total) tile-loop bound, lowers to a
+deterministic all-reduce, so sharded fused runs stay bit-identical too
+(pinned by tests/test_fused_select.py::test_fused_mesh_parity).
+
 Training rides the same mesh through ``train_gan(..., mesh=...)`` (which
 defaults to the active task mesh): sharded pre-encoded batches, donated
 replicated carries, gradients all-reduced over ('pod', 'data') by GSPMD.

@@ -1,7 +1,8 @@
 """Seeded-random fallback for `hypothesis` when it is not installed.
 
 Implements exactly the subset this suite uses — ``given``, ``settings``
-and the ``integers / floats / lists / tuples / builds`` strategies — by
+and the ``integers / floats / lists / tuples / builds / sampled_from``
+strategies — by
 degrading each ``@given`` property test to ``max_examples`` seeded-random
 example runs.  Weaker than real hypothesis (no shrinking, no failure
 database, no edge-case bias) but it keeps the property tests collectible
@@ -61,6 +62,11 @@ class strategies:
     @staticmethod
     def builds(target: Callable, *ss: _Strategy) -> _Strategy:
         return _Strategy(lambda r: target(*(s.draw(r) for s in ss)))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        pool = list(elements)
+        return _Strategy(lambda r: pool[int(r.integers(0, len(pool)))])
 
 
 def settings(max_examples: int = 20, deadline=None, **_kw):

@@ -145,23 +145,28 @@ def test_enumeration_batch_matches_host(name, models):
             np.testing.assert_array_equal(cand[t, :counts[t]], host)
 
 
-def test_enumeration_trim_at_cap_limit():
-    """cap == 2**20 (the largest permitted) must still trim on device: the
-    product clamp sits strictly above the cap (regression: clamping AT the
-    cap made `> cap` unsatisfiable, disabling the trim and allocating the
-    untrimmed cartesian product).  Checked at the mask level so the test
-    never materializes a ~1M-row candidate tensor."""
+@pytest.mark.parametrize("n_groups,lim_name", [(8, "_DENSE_LIM"),
+                                               (10, "_PROD_LIM")])
+def test_enumeration_trim_at_cap_limit(n_groups, lim_name):
+    """cap == the route limit (dense 2**20, fused 2**26) must still trim on
+    device: the product clamp sits strictly above the cap (regression:
+    clamping AT the cap made `> cap` unsatisfiable, disabling the trim and
+    allocating the untrimmed cartesian product).  8 groups of 8 (2**24)
+    overflows the dense limit, 10 groups (2**30) the fused one; checked at
+    the mask level so the test never materializes the candidate tensor."""
+    import repro.core.explorer as explorer
     from repro.core.encoding import ConfigDim, ConfigSpace
-    from repro.core.explorer import (_PROD_LIM, _batched_enum_fns,
-                                     _trimmed_employed)
+    from repro.core.explorer import _batched_enum_fns, _trimmed_employed
 
     space = ConfigSpace(dims=tuple(
         ConfigDim(f"d{i}", tuple(float(j) for j in range(8)))
-        for i in range(8)))                      # product 8**8 >> 2**20
+        for i in range(n_groups)))               # product 8**n >> cap
     rng = np.random.default_rng(0)
-    probs = np.concatenate([rng.dirichlet(np.ones(8)) for _ in range(8)]
+    probs = np.concatenate([rng.dirichlet(np.ones(8))
+                            for _ in range(n_groups)]
                            ).astype(np.float32)[None]
-    cap = _PROD_LIM
+    cap = getattr(explorer, lim_name)
+    assert 8 ** n_groups > cap                   # the trim must engage
     masks_fn, _ = _batched_enum_fns(space)
     keep, counts, total = masks_fn(jnp.asarray(probs), jnp.float32(0.01),
                                    jnp.int32(cap))

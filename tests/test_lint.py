@@ -189,6 +189,19 @@ FIXTURES = {
         def refresh(fe, ds, params):
             return fe.swap("m", ds, params)
         """),
+    "GL112": ("mod.py", """
+        import numpy as np
+
+        def explore_batch(probs, cap):
+            keep, total = _masks(probs, cap)
+            counts_host = np.asarray(total)
+            c_pad = _bucket(counts_host.max())
+            return _unravel(keep, total, c_pad)
+        """, """
+        def explore_batch(probs, cap):
+            keep, total = _masks(probs, cap)
+            return _select_tiled(keep, total, cap)
+        """),
 }
 
 RULE_NAMES = {r.code: r.name for r in make_rules()}
@@ -391,6 +404,49 @@ def test_swap_lock_bypass_fires_in_methods_too():
         """)
     findings = lint_source(src, path="mod.py")
     assert [f.code for f in findings] == ["GL111"]
+
+
+def test_dispatch_sync_reachable_through_helper():
+    """The explorer.py:249 bug class: the host read hid inside a helper
+    the dispatch entry point called by simple name."""
+    src = textwrap.dedent("""
+        import numpy as np
+
+        def _pick_pad(total):
+            return int(np.asarray(total).max())
+
+        def execute_batch(batch, run):
+            out, total = run(batch)
+            return out[: _pick_pad(total)]
+        """)
+    findings = lint_source(src, path="mod.py")
+    assert [f.code for f in findings] == ["GL112"]
+    # int(np.asarray(...)) on one line fires once, not per detector
+    assert "np" in findings[0].message or "device->host" in findings[0].message
+
+
+def test_dispatch_sync_marker_sanctions():
+    src = textwrap.dedent("""
+        import numpy as np
+
+        def explore_batch(tasks, run):
+            sels = run(tasks)
+            # results consumed on host  # lint: dispatch-sync-ok
+            return np.asarray(sels)
+        """)
+    assert lint_source(src, path="mod.py") == []
+
+
+def test_dispatch_sync_ignores_non_dispatch_functions():
+    """Host tails outside the dispatch roots (e.g. the float64 re-score
+    in selections_from_winners) are deliberately out of scope."""
+    src = textwrap.dedent("""
+        import numpy as np
+
+        def selections_from_winners(chosen, win):
+            return np.asarray(chosen), np.asarray(win)
+        """)
+    assert lint_source(src, path="mod.py") == []
 
 
 def test_def_span_suppression():

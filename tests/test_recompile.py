@@ -42,6 +42,37 @@ def test_explore_batch_in_bucket_zero_recompiles(engine, no_recompile):
             assert len(results) == n
 
 
+def test_fused_route_zero_recompiles_across_candidate_counts(engine,
+                                                             no_recompile):
+    """The fused tiled program is static in everything but the task
+    bucket: threshold and cap are traced arguments and the tile-loop trip
+    count is ceil(max(total)/tile) computed on device, so warm dispatches
+    with different candidate counts — including caps that span one tile
+    vs several — reuse ONE compiled program.  (The dense route cannot
+    pass this: its C_pad bucket is a static shape picked by a host sync.)
+    """
+    warm = generate_tasks(engine.model, 8, seed=11)
+    engine.explore_batch(warm, seed=101)        # warm bucket 8 at cap 128
+    cfg = engine.explorer_cfg
+    base = (cfg.prob_threshold, cfg.max_candidates)
+    try:
+        with no_recompile(label="fused route across candidate counts"):
+            counts_seen = set()
+            for thresh, cap, n, seed in ((0.30, 32, 5, 17),
+                                         (0.05, 64, 6, 23),
+                                         (0.02, 256, 7, 29),
+                                         (0.01, 2048, 8, 31)):  # multi-tile
+                cfg.prob_threshold, cfg.max_candidates = thresh, cap
+                tasks = generate_tasks(engine.model, n, seed=seed)
+                results = engine.explore_batch(tasks, seed=seed)
+                assert len(results) == n
+                counts_seen.update(r.selection.n_candidates for r in results)
+        # the sweep really produced different candidate-set sizes
+        assert len(counts_seen) > 4, counts_seen
+    finally:
+        cfg.prob_threshold, cfg.max_candidates = base
+
+
 def test_warm_serve_dispatch_zero_recompiles(engine, no_recompile):
     """Warm `DSEServer` dispatch: micro-batches of 5/6/7 distinct requests
     (cache disabled, so every round really dispatches) pad to bucket 8 and

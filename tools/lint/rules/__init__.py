@@ -13,6 +13,7 @@ from .locks import LockDiscipline, SwapLockBypass
 from .excepts import OverbroadExcept
 from .pallas_blocks import PallasBlockSpec
 from .nan_guard import NanTransparentViolation
+from .dispatch_sync import HostSyncInDispatch
 
 ALL_RULES = [
     PrngKeyReuse,              # GL101
@@ -26,6 +27,7 @@ ALL_RULES = [
     JitPerCall,                # GL109
     NanTransparentViolation,   # GL110
     SwapLockBypass,            # GL111
+    HostSyncInDispatch,        # GL112
 ]
 
 

@@ -1,0 +1,89 @@
+"""GL112 host-sync-in-dispatch: device->host materialization inside the
+batched dispatch entry points.
+
+The bug class: ``enumerate_candidates_batch`` used to read back
+``np.asarray(total)`` mid-dispatch to pick the padded candidate width
+(explorer.py, pre-fused-route), stalling the device pipeline in the
+middle of what serving treats as one uninterrupted program.  The fused
+tiled route computes every extent on device; this rule keeps host reads
+(``np.asarray``/``np.array``/``jax.device_get``/``.item()``, or
+``int()``/``float()`` wrapping one of them) out of dispatch bodies —
+functions named ``explore_batch`` or ``execute_batch`` plus everything
+they reach through same-module simple-name calls.  Host tails that run
+*after* the dispatch returns (e.g. ``selections_from_winners`` in
+core/selector) live in other modules and are deliberately out of scope.
+
+Sanctioned reads (e.g. a result consumed on the host right at the entry
+point by design) carry a ``# lint: dispatch-sync-ok`` marker.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set
+
+from ..core import FileContext, Finding, Rule
+from .jit_purity import _own_body
+
+DISPATCH_SYNC_MARKER = "lint: dispatch-sync-ok"
+
+#: dispatch entry points: the engines' batched explore and the serve
+#: dispatch path (DSEServer.execute_batch)
+_DISPATCH_ROOTS = {"explore_batch", "execute_batch"}
+_MATERIALIZERS = {"numpy.asarray", "numpy.array", "jax.device_get"}
+
+
+class HostSyncInDispatch(Rule):
+    name = "host-sync-in-dispatch"
+    code = "GL112"
+    description = ("device->host read (np.asarray/.item()/device_get) "
+                   "inside explore_batch/execute_batch-reachable dispatch "
+                   "code without the '# lint: dispatch-sync-ok' marker")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        defs: Dict[str, ast.AST] = {}
+        for fn in ctx.functions():
+            defs.setdefault(fn.name, fn)
+
+        reachable: Set[str] = {n for n in _DISPATCH_ROOTS if n in defs}
+        frontier = list(reachable)
+        while frontier:
+            fn = defs[frontier.pop()]
+            for node in _own_body(fn):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Name) and \
+                        node.func.id in defs and node.func.id not in reachable:
+                    reachable.add(node.func.id)
+                    frontier.append(node.func.id)
+
+        for name in sorted(reachable):
+            seen_lines: Set[int] = set()
+            for node in _own_body(defs[name]):
+                msg = self._host_read(ctx, node)
+                if msg is None or node.lineno in seen_lines:
+                    continue
+                seen_lines.add(node.lineno)   # int(np.asarray(x)) fires once
+                if not ctx.line_has_marker(node.lineno, DISPATCH_SYNC_MARKER):
+                    yield self.finding(
+                        ctx, node,
+                        f"{msg} inside dispatch-reachable '{name}': the "
+                        f"batched route must stay one uninterrupted device "
+                        f"program — compute the extent on device (see "
+                        f"core/fused_select) or mark a sanctioned read "
+                        f"with '# {DISPATCH_SYNC_MARKER}'")
+
+    def _host_read(self, ctx: FileContext, node: ast.AST) -> Optional[str]:
+        if not isinstance(node, ast.Call):
+            return None
+        name = ctx.call_name(node)
+        if name in _MATERIALIZERS and any(
+                not isinstance(a, ast.Constant) for a in node.args):
+            return f"{name} device->host materialization"
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+                and not node.args:
+            return ".item() device sync"
+        if name in ("int", "float") and node.args and any(
+                isinstance(sub, ast.Call)
+                and ctx.call_name(sub) in _MATERIALIZERS
+                for sub in ast.walk(node.args[0])):
+            return f"{name}() of a device->host read"
+        return None
